@@ -1,0 +1,106 @@
+"""Accuracy benchmarks on trained proxy models (Tables 1, 2, 3, 7, 8).
+
+Qualitative reproduction targets (the paper's claims):
+  T1/T7: AllReduce quantization — INT8/6/5 ~ BF16, INT4 slight, INT3
+         visible, INT2 collapses under plain RTN.
+  T2/T8: All2All dispatch quantization is far more tolerant — INT2
+         degrades but does not collapse.
+  T3:    at INT2/3 (gs32), SpikeReserving < RTN loss; Hadamard/LogFMT
+         collapse at INT2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.proxy import eval_loss, get_trained
+from repro.core.baselines import hadamard_qdq, logfmt_qdq
+from repro.core.comm_config import CommConfig, NO_COMPRESSION, \
+    default_comm_config
+from repro.core.policy import BF16_POLICY, CommPolicy
+from repro.core.quant import qdq
+from repro.core.spike import spike_qdq
+
+
+def bench_sensitivity(fast: bool = False) -> List[Dict]:
+    """T1 (AllReduce) + T2 (All2All dispatch) sensitivity sweeps."""
+    rows = []
+    cfgd, pland, meshd, stored, dsd = get_trained("dense")
+    base = eval_loss(cfgd, pland, meshd, stored, dsd, BF16_POLICY)
+    rows.append({"key": "table1,ar,bf16", "value": round(base, 4)})
+    bits_list = [8, 5, 4, 2] if fast else [8, 6, 5, 4, 3, 2]
+    for bits in bits_list:
+        # plain RTN (no spike) — the T1 configuration
+        g = 128 if bits >= 5 else 32
+        pol = CommPolicy(tp=CommConfig(bits=bits, group=g, spike=False))
+        loss = eval_loss(cfgd, pland, meshd, stored, dsd, pol)
+        rows.append({"key": f"table1,ar,int{bits}",
+                     "value": round(loss, 4),
+                     "delta_vs_bf16": round(loss - base, 4)})
+
+    cfgm, planm, meshm, storem, dsm = get_trained("moe")
+    basem = eval_loss(cfgm, planm, meshm, storem, dsm, BF16_POLICY)
+    rows.append({"key": "table2,a2a,bf16", "value": round(basem, 4)})
+    for bits in bits_list:
+        g = 128 if bits >= 5 else 32
+        pol = CommPolicy(a2a=CommConfig(bits=bits, group=g, spike=False))
+        loss = eval_loss(cfgm, planm, meshm, storem, dsm, pol)
+        rows.append({"key": f"table2,a2a,int{bits}",
+                     "value": round(loss, 4),
+                     "delta_vs_bf16": round(loss - basem, 4)})
+    return rows
+
+
+def bench_spike(fast: bool = False) -> List[Dict]:
+    """T3: RTN vs Hadamard vs LogFMT vs SpikeReserving.
+
+    Two layers of evidence: (a) QDQ MSE on activation-like tensors with
+    massive outliers (paper Fig. 4 setting), (b) end-to-end eval loss of
+    the dense proxy with each method applied at the AR site.
+    """
+    rows = []
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 4096)).astype(np.float32)
+    # heavy-tailed massive activations (paper: down_proj inputs)
+    spikes = rng.integers(0, 4096, size=(64, 40))
+    for r in range(64):
+        x[r, spikes[r]] *= rng.uniform(20, 80, 40)
+    xj = jnp.asarray(x)
+    denom = float(jnp.mean(xj ** 2))
+    for bits in ([2, 3] if fast else [2, 3, 4]):
+        for name, fn in (("rtn", qdq), ("hadamard", hadamard_qdq),
+                         ("logfmt", logfmt_qdq), ("spike", spike_qdq)):
+            err = float(jnp.mean((fn(xj, bits, 32) - xj) ** 2)) / denom
+            rows.append({"key": f"table3,mse,int{bits},{name}",
+                         "value": round(err, 6)})
+
+    cfgd, pland, meshd, stored, dsd = get_trained("dense")
+    for bits in [3, 2]:
+        rtn = CommPolicy(tp=CommConfig(bits=bits, group=32, spike=False))
+        sr = CommPolicy(tp=CommConfig(bits=bits, group=32, spike=True))
+        l_rtn = eval_loss(cfgd, pland, meshd, stored, dsd, rtn)
+        l_sr = eval_loss(cfgd, pland, meshd, stored, dsd, sr)
+        rows.append({"key": f"table3,loss,int{bits},rtn",
+                     "value": round(l_rtn, 4)})
+        rows.append({"key": f"table3,loss,int{bits},spike",
+                     "value": round(l_sr, 4),
+                     "sr_better": bool(l_sr < l_rtn)})
+    return rows
+
+
+def bench_scale_int(fast: bool = False) -> List[Dict]:
+    """Eq. 1 / Table 4 companion: accuracy cost of integer scales."""
+    rows = []
+    cfgd, pland, meshd, stored, dsd = get_trained("dense")
+    for scale_int in (False, True):
+        pol = CommPolicy(tp=CommConfig(bits=4, group=32, spike=True,
+                                       scale_int=scale_int))
+        loss = eval_loss(cfgd, pland, meshd, stored, dsd, pol)
+        rows.append({"key": f"table4,acc,int4sr,"
+                            f"{'scale_int' if scale_int else 'bf16meta'}",
+                     "value": round(loss, 4)})
+    return rows

@@ -1,0 +1,45 @@
+"""Kernel microbenchmarks: fused QDQ+pack throughput (CPU wall numbers
+are for relative comparison only; the Pallas path targets TPU VMEM).
+
+Also reports the wire-volume reduction each bit width buys — the
+quantity the paper's bandwidth gains are made of.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.core import codec
+from repro.core.comm_config import default_comm_config
+from repro.kernels import ref
+from repro.kernels.quant_pack import quant_pack
+
+
+def bench_kernels(fast: bool = False) -> List[Dict]:
+    rows = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 4096), jnp.float32)
+    for bits in ([8, 4, 2] if fast else [8, 6, 5, 4, 3, 2]):
+        group = 128 if bits >= 5 else 32
+        k = jax.jit(lambda t: quant_pack(t, bits=bits, group=group,
+                                         interpret=True))
+        r = jax.jit(lambda t: ref.quant_pack_ref(t, bits, group))
+        us_k = timeit(k, x, reps=3, warmup=1)
+        us_r = timeit(r, x, reps=3, warmup=1)
+        cfg = default_comm_config(bits)
+        rows.append({
+            "key": f"kernel,quant_pack,int{bits}",
+            "value": round(us_k, 1), "unit": "us(interpret)",
+            "ref_us": round(us_r, 1),
+            "wire_ratio_vs_bf16": round(cfg.compression_ratio(4096), 2),
+        })
+    # end-to-end wire codec throughput (the jnp path the collectives use)
+    for bits in (8, 2):
+        cfg = default_comm_config(bits)
+        enc = jax.jit(lambda t: codec.encode(t, cfg))
+        us = timeit(enc, x, reps=3, warmup=1)
+        rows.append({"key": f"kernel,codec_encode,int{bits}",
+                     "value": round(us, 1), "unit": "us"})
+    return rows

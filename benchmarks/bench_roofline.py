@@ -1,0 +1,39 @@
+"""Roofline table (deliverable g): reads the dry-run sweep JSON and
+prints the three terms per (arch x shape) with the dominant bottleneck.
+
+Run the sweep first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_singlepod.json
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+SWEEP = os.path.join(os.path.dirname(__file__), "..",
+                     "roofline_baseline.json")
+
+
+def bench_roofline(fast: bool = False) -> List[Dict]:
+    if not os.path.exists(SWEEP):
+        return [{"key": "roofline,missing",
+                 "value": "run repro.launch.dryrun --all first"}]
+    rows = []
+    with open(SWEEP) as f:
+        recs = json.load(f)
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append({"key": f"roofline,{r['arch']},{r['shape']}",
+                         "value": r.get("status"),
+                         "reason": r.get("skip_reason", "")[:60]})
+            continue
+        rows.append({
+            "key": f"roofline,{r['arch']},{r['shape']}",
+            "t_compute_ms": round(r["t_compute"] * 1e3, 3),
+            "t_memory_ms": round(r["t_memory"] * 1e3, 3),
+            "t_collective_ms": round(r["t_collective"] * 1e3, 3),
+            "value": r["bottleneck"],
+            "model_flops_ratio": round(r["model_flops_ratio"], 3)
+            if r.get("model_flops_ratio") else None,
+        })
+    return rows

@@ -1,0 +1,58 @@
+"""Benchmark harness plumbing: row collection, CSV, proxy-model cache.
+
+Each bench module exposes ``run(fast: bool) -> list[dict]``; run.py
+executes them all and writes benchmarks/results/<name>.json + a CSV
+stream on stdout (``bench,key,value`` rows).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# TPU v5e modelling constants (same as launch/dryrun.py)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9          # fast domain (intra-pod) per link
+DCI_BW = 6.25e9        # slow bridge (cross-pod), ~1/8 ICI — the "NUMA"
+                       # analogue for hierarchical schemes
+VPU_BYTES_PER_S = 4e12  # rough elementwise throughput for QDQ cost
+
+
+def save(name: str, rows: List[Dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def emit(name: str, rows: List[Dict]) -> None:
+    for r in rows:
+        key = r.get("key") or ",".join(
+            str(v) for k, v in r.items() if k not in ("value", "unit"))
+        print(f"{name},{key},{r.get('value')}")
+
+
+def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall us per call (jit'd callables; CPU)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    _block(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _block(out):
+    import jax
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()

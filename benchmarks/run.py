@@ -1,0 +1,77 @@
+"""Benchmark runner: one bench per paper table/figure.
+
+  python -m benchmarks.run [--fast] [--only NAME]
+
+Prints ``bench,key,value`` CSV rows and writes benchmarks/results/*.json.
+Mapping to the paper:
+  footprint     Table 4    exact byte accounting
+  volume        Table 5    cross-bridge volume accounting
+  sensitivity   Tables 1+2 proxy-model AR/A2A bitwidth sweeps
+  spike         Table 3    RTN/Hadamard/LogFMT/SR comparison
+  scale_int     Eq.1/T4    integer-scale accuracy cost
+  allreduce_bw  Table 9    algorithmic-bandwidth model (TPU constants)
+  all2all_bw    Table 10   same for All2All dispatch
+  ttft          Fig 2      llama3-8b TTFT model
+  pipeline      Fig 8      hierarchical pipeline schedule simulator
+  kernels       setup sec  fused QDQ kernel micro-timings
+  roofline      delv. (g)  three-term roofline from the dry-run sweep
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import emit, save
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks.bench_tables import (bench_all2all_bw,
+                                         bench_allreduce_bw,
+                                         bench_footprint, bench_pipeline,
+                                         bench_ttft, bench_volume)
+    from benchmarks.bench_accuracy import (bench_scale_int,
+                                           bench_sensitivity, bench_spike)
+    from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.bench_roofline import bench_roofline
+
+    benches = {
+        "footprint": bench_footprint,
+        "volume": bench_volume,
+        "sensitivity": bench_sensitivity,
+        "spike": bench_spike,
+        "scale_int": bench_scale_int,
+        "allreduce_bw": bench_allreduce_bw,
+        "all2all_bw": bench_all2all_bw,
+        "ttft": bench_ttft,
+        "pipeline": bench_pipeline,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    failures = 0
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn(fast=args.fast)
+            save(name, rows)
+            emit(name, rows)
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  flush=True)
+        except Exception as e:  # keep going; report at the end
+            failures += 1
+            import traceback
+            print(f"# {name}: FAILED {type(e).__name__}: {e}")
+            traceback.print_exc()
+    print(f"# done ({failures} failures)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md appendix tables from the sweep JSON artifacts.
+
+  PYTHONPATH=src python scripts/render_experiments.py >> EXPERIMENTS.md
+"""
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(name):
+    p = os.path.join(ROOT, name)
+    return json.load(open(p)) if os.path.exists(p) else None
+
+
+def dryrun_table(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | status | compile_s | temp GB/dev | arg GB/dev |")
+    print("|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            reason = (r.get("skip_reason") or r.get("error", ""))[:48]
+            print(f"| {r['arch']} | {r['shape']} | **{r['status']}** "
+                  f"({reason}) | | | |")
+            continue
+        mem = r.get("mem", {})
+        tmp = (mem.get("temp_bytes") or 0) / 2**30
+        arg = (mem.get("argument_bytes") or 0) / 2**30
+        print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+              f"{tmp:.2f} | {arg:.2f} |")
+
+
+def roofline_table(recs, opt=None):
+    opt = {(r["arch"], r["shape"]): r for r in (opt or [])}
+    print("\n### Roofline — single-pod, slope-corrected (s/step/device)\n")
+    print("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+          "6ND/HLO | optimized (comp/mem/coll) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | skip | | | | | |")
+            continue
+        o = opt.get((r["arch"], r["shape"]))
+        ocell = (f"{o['t_compute']:.3f}/{o['t_memory']:.3f}/"
+                 f"{o['t_collective']:.3f}" if o else "")
+        mfr = r.get("model_flops_ratio") or 0
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3f} | "
+              f"{r['t_memory']:.3f} | {r['t_collective']:.3f} | "
+              f"**{r['bottleneck']}** | {mfr:.2f} | {ocell} |")
+
+
+def main():
+    sp = _load("dryrun_singlepod.json")
+    mp = _load("dryrun_multipod.json")
+    rf = _load("roofline_baseline.json")
+    pf = _load("perf3_optimized.json")
+    print("\n---\n\n## Appendix: generated tables "
+          "(scripts/render_experiments.py)")
+    if sp:
+        dryrun_table(sp, "Single-pod (16x16 = 256 chips) lowering proof")
+    if mp:
+        dryrun_table(mp, "Multi-pod (2x16x16 = 512 chips) lowering proof")
+    if rf:
+        roofline_table(rf, pf)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Comparison codecs from the paper's Table 3: Hadamard and LogFMT.
+
+Both are implemented as QDQ simulators (the paper shows they *collapse*
+at INT2 while Spike Reserving does not; we reproduce that qualitative
+result in bench_spike). They are not wired into the collectives — the
+paper rejects them for communication use on accuracy and cost grounds.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import group_reshape, group_unreshape, qdq
+
+_EPS = 1e-12
+
+
+def hadamard_transform(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized fast Walsh-Hadamard transform along the last axis.
+
+    Last axis must be a power of two (quant groups 32/128 are).
+    Self-inverse under the 1/sqrt(n) normalization.
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"FWHT needs power-of-two size, got {n}"
+    y = x.astype(jnp.float32)
+    h = 1
+    while h < n:
+        y = y.reshape(*x.shape[:-1], n // (2 * h), 2, h)
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1)
+        y = y.reshape(*x.shape[:-1], n)
+        h *= 2
+    return y / jnp.sqrt(float(n))
+
+
+def hadamard_qdq(x: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """Rotate each group, RTN-quantize, de-rotate (QuaRot-style)."""
+    xg = group_reshape(x.astype(jnp.float32), group)
+    rot = hadamard_transform(xg)
+    flat = group_unreshape(rot)
+    dq = qdq(flat, bits, group)
+    back = hadamard_transform(group_reshape(dq, group))
+    return group_unreshape(back).astype(x.dtype)
+
+
+def logfmt_qdq(x: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """LogFMT (DeepSeek-V3 insights): 1 sign bit + (bits-1)-bit log magnitude.
+
+    Log-domain codes are RTN-quantized per group; dequantization
+    exponentiates, which amplifies errors at low bit widths (the paper's
+    point about why it fails at INT2).
+    """
+    assert bits >= 2
+    xg = group_reshape(x.astype(jnp.float32), group)
+    sign = jnp.sign(xg)
+    mag = jnp.abs(xg)
+    # Clamp zeros to the group's representable floor.
+    floor = jnp.maximum(jnp.max(mag, axis=-1, keepdims=True) * 1e-5, _EPS)
+    m = jnp.log2(jnp.maximum(mag, floor))
+    mflat = group_unreshape(m)
+    m_dq = group_reshape(qdq(mflat, bits - 1, group), group)
+    y = sign * jnp.exp2(m_dq)
+    y = jnp.where(mag < floor, 0.0, y)
+    return group_unreshape(y).astype(x.dtype)

@@ -1,0 +1,315 @@
+"""Quantized collectives — the paper's communication schemes on TPU axes.
+
+All functions are written for use INSIDE :func:`jax.shard_map` and take
+mesh axis names. The wire that crosses the link is the packed uint8 buffer
+from :mod:`repro.core.codec`; everything else (chunking, local reduction,
+scatter/gather choreography) is the Flash Communication two-step and its
+hierarchical / pipelined variants mapped onto ``jax.lax`` collectives:
+
+===============================  =======================================
+paper (GPU / NCCL)               this module (TPU / jax.lax)
+===============================  =======================================
+NCCL Ring AllReduce (baseline)   ``lax.psum``
+Flash two-step AllReduce         ``quantized_all_reduce`` (a2a + local
+                                 reduce + ag, QDQ at both phases)
+hierarchical two-step (NUMA)     ``hierarchical_all_reduce`` over
+                                 (inner=ICI, outer=pod/DCI) axes
+hier. + pipeline parallelism     ``pipelined_hierarchical_all_reduce``
+                                 (microchunked, overlappable)
+All2All dispatch quant (EP)      ``quantized_all_to_all``
+ZeRO++-style qAG/qRS (beyond)    ``quantized_all_gather`` /
+                                 ``quantized_reduce_scatter``
+===============================  =======================================
+
+Gradient notes: every collective here carries its *true* transpose so
+``jax.grad`` inside shard_map (with per-rank loss seeding) is exact:
+``compressed_psum`` transposes to a psum of cotangents (the Megatron
+f-operator all-reduce), ``fsdp_all_gather`` to a reduce-scatter, and
+``quantized_all_to_all`` to a full-precision all_to_all in the reverse
+direction (dispatch is quantized, combine stays BF16, following
+DeepSeek-V3 / the paper). Quantization itself is straight-through.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import codec
+from repro.core.comm_config import CommConfig
+
+
+# --------------------------------------------------------------------------
+# padding helpers
+# --------------------------------------------------------------------------
+
+def _pad_to(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    n = x.shape[-1]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+    return jnp.pad(x, pad)
+
+
+def padded_len(n: int, mult: int) -> int:
+    return n + (-n) % mult
+
+
+# --------------------------------------------------------------------------
+# flat-vector building blocks (x: (n,) per device, n % (tp*group) == 0)
+# --------------------------------------------------------------------------
+
+def _gsize(axis, groups):
+    return len(groups[0]) if groups is not None else lax.axis_size(axis)
+
+
+def quantized_all_reduce(x: jnp.ndarray, axis: str,
+                         cfg: CommConfig, groups=None) -> jnp.ndarray:
+    """Flash two-step AR on a flat (n,) vector over one mesh axis.
+
+    Phase 1: chunk + quantize + all_to_all + dequant + local reduce.
+    Phase 2: re-quantize partial sum + all_gather + dequant.
+    Matches the paper's fused kernel semantics (QDQ around each hop).
+    """
+    tp = _gsize(axis, groups)
+    n = x.shape[-1]
+    assert n % tp == 0 and (n // tp) % cfg.group == 0, (n, tp, cfg.group)
+    xc = x.reshape(tp, n // tp)
+    wire = codec.encode(xc, cfg)                         # (tp, w)
+    recv = lax.all_to_all(wire, axis, 0, 0, tiled=True,
+                          axis_index_groups=groups)      # rows from peers
+    parts = codec.decode(recv, cfg, n // tp)             # (tp, n/tp) f32
+    partial = jnp.sum(parts, axis=0)                     # my chunk, summed
+    wire2 = codec.encode(partial, cfg)                   # (w,)
+    allw = lax.all_gather(wire2, axis, axis=0,
+                          axis_index_groups=groups)      # (tp, w)
+    full = codec.decode(allw, cfg, n // tp)              # (tp, n/tp)
+    return full.reshape(n).astype(x.dtype)
+
+
+def quantized_reduce_scatter(x: jnp.ndarray, axis: str,
+                             cfg: CommConfig) -> jnp.ndarray:
+    """Quantized RS: (n,) -> (n/tp,) summed chunk (phase 1 of two-step)."""
+    tp = lax.axis_size(axis)
+    n = x.shape[-1]
+    assert n % tp == 0 and (n // tp) % cfg.group == 0
+    xc = x.reshape(tp, n // tp)
+    wire = codec.encode(xc, cfg)
+    recv = lax.all_to_all(wire, axis, 0, 0, tiled=True)
+    parts = codec.decode(recv, cfg, n // tp)
+    return jnp.sum(parts, axis=0).astype(x.dtype)
+
+
+def quantized_all_gather(x: jnp.ndarray, axis: str,
+                         cfg: CommConfig) -> jnp.ndarray:
+    """Quantized AG: (k,) -> (tp*k,). ZeRO++-style weight gather."""
+    n = x.shape[-1]
+    assert n % cfg.group == 0
+    wire = codec.encode(x, cfg)
+    allw = lax.all_gather(wire, axis, axis=0)            # (tp, w)
+    full = codec.decode(allw, cfg, n)
+    return full.reshape(-1).astype(x.dtype)
+
+
+def quantized_all_to_all(x: jnp.ndarray, axis: str, cfg: CommConfig,
+                         split_axis: int = 0,
+                         concat_axis: int = 0, groups=None) -> jnp.ndarray:
+    """Quantized A2A for MoE dispatch. x: (tp, ..., d) rows to each peer.
+
+    Only the dispatch payload is quantized (combine stays BF16), following
+    the paper / DeepSeek-V3. The last axis must be a multiple of group.
+    """
+    if not cfg.enabled:
+        return lax.all_to_all(x, axis, split_axis, concat_axis, tiled=True,
+                              axis_index_groups=groups)
+    d = x.shape[-1]
+    assert d % cfg.group == 0, (d, cfg.group)
+    wire = codec.encode(x, cfg)
+    recv = lax.all_to_all(wire, axis, split_axis, concat_axis, tiled=True,
+                          axis_index_groups=groups)
+    return codec.decode(recv, cfg, d, out_dtype=x.dtype)
+
+
+# --------------------------------------------------------------------------
+# hierarchical schemes (paper: NUMA -> here: inner=ICI fast, outer=pod slow)
+# --------------------------------------------------------------------------
+
+def hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str, outer_axis: str,
+                            cfg: CommConfig,
+                            outer_cfg: CommConfig | None = None
+                            ) -> jnp.ndarray:
+    """Three-stage hierarchical AR (paper Figs. 6-7, Table 5).
+
+    1. partial ReduceScatter inside the fast domain (inner axis),
+    2. AllReduce of the scattered partial sums across the slow bridge
+       (outer axis) — only n/inner values cross, the 4M -> M saving,
+    3. partial AllGather inside the fast domain.
+
+    ``outer_cfg`` lets the slow hop use a more aggressive width than the
+    fast hop (beyond-paper knob; defaults to ``cfg``).
+    """
+    outer_cfg = outer_cfg or cfg
+    inner = lax.axis_size(inner_axis)
+    n = x.shape[-1]
+    assert n % inner == 0 and (n // inner) % cfg.group == 0
+    chunk = quantized_reduce_scatter(x, inner_axis, cfg)     # (n/inner,)
+    outer = lax.axis_size(outer_axis)
+    if outer > 1:
+        if (n // inner) % (outer * outer_cfg.group) == 0:
+            chunk = quantized_all_reduce(chunk, outer_axis, outer_cfg)
+        else:  # small remainder chunks: quantized AG + local sum
+            wire = codec.encode(chunk, outer_cfg)
+            allw = lax.all_gather(wire, outer_axis, axis=0)
+            chunk = jnp.sum(
+                codec.decode(allw, outer_cfg, chunk.shape[-1]), axis=0
+            ).astype(x.dtype)
+    full = quantized_all_gather(chunk, inner_axis, cfg)      # (n,)
+    return full.astype(x.dtype)
+
+
+def pipelined_hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str,
+                                      outer_axis: str, cfg: CommConfig,
+                                      outer_cfg: CommConfig | None = None
+                                      ) -> jnp.ndarray:
+    """Microchunked hierarchical AR (paper Fig. 8).
+
+    The vector is cut into ``cfg.pipeline_chunks`` microchunks whose
+    three-stage schedules are *independent*; on real hardware the XLA/ICI
+    scheduler overlaps chunk i's cross-pod hop with chunk i+1's intra-pod
+    ReduceScatter, hiding the slow-bridge latency (paper: up to 20%).
+    Semantically identical to the serial version.
+    """
+    chunks = max(1, cfg.pipeline_chunks)
+    inner = lax.axis_size(inner_axis)
+    n = x.shape[-1]
+    mult = inner * cfg.group * chunks
+    assert n % mult == 0, (n, mult)
+    xs = x.reshape(chunks, n // chunks)
+    outs = [hierarchical_all_reduce(xs[c], inner_axis, outer_axis, cfg,
+                                    outer_cfg)
+            for c in range(chunks)]
+    return jnp.stack(outs).reshape(n)
+
+
+# --------------------------------------------------------------------------
+# shaped wrappers with padding + custom VJP (the public model-facing API)
+# --------------------------------------------------------------------------
+
+def _flat_all_reduce(xf: jnp.ndarray, axes: Sequence[str],
+                     cfg: CommConfig) -> jnp.ndarray:
+    """Dispatch on scheme for a padded flat vector over (inner[, outer])."""
+    if cfg.scheme == "two_step" or len(axes) == 1:
+        out = xf
+        for ax in axes:  # sequential two-step per axis
+            out = quantized_all_reduce(out, ax, cfg)
+        return out
+    inner, outer = axes
+    if cfg.scheme == "hierarchical":
+        return hierarchical_all_reduce(xf, inner, outer, cfg)
+    if cfg.scheme == "hier_pp":
+        return pipelined_hierarchical_all_reduce(xf, inner, outer, cfg)
+    raise ValueError(f"unknown scheme {cfg.scheme}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def compressed_psum(x: jnp.ndarray, axes: tuple, cfg: CommConfig,
+                    groups=None, bwd_cfg: CommConfig | None = None):
+    """psum(x) over mesh axes with the paper's compressed wire format.
+
+    Accepts any shape; flattens, zero-pads to the chunking granularity,
+    runs the configured scheme, and restores the shape. ``axes`` is a
+    tuple: 1 axis -> two-step; 2 axes -> (inner, outer) hierarchical
+    schemes are available via ``cfg.scheme``.
+
+    Backward pass: the true transpose — psum of cotangents over the same
+    axes (exact, unquantized). Under per-rank loss seeding inside
+    shard_map this is the Megatron f-operator all-reduce; it makes
+    jax.grad of the global function exact. (The paper's inference path
+    has no backward; training-side cotangent compression is a separate
+    knob we deliberately keep exact.)
+    """
+    if not cfg.enabled:
+        out = x
+        for ax in axes:
+            out = lax.psum(out, ax, axis_index_groups=groups)
+        return out
+    if groups is not None:
+        assert len(axes) == 1, "groups only supported for single-axis psum"
+        sizes = [len(groups[0])]
+        mult = sizes[0] * cfg.group
+        xf = _pad_to(x.reshape(-1), mult)
+        out = quantized_all_reduce(xf.astype(jnp.float32), axes[0], cfg,
+                                   groups=groups)
+        n = 1
+        for s in x.shape:
+            n *= s
+        return out[:n].reshape(x.shape).astype(x.dtype)
+    sizes = [lax.axis_size(a) for a in axes]
+    chunks = cfg.pipeline_chunks if cfg.scheme == "hier_pp" else 1
+    mult = sizes[0] * cfg.group * chunks
+    for s in sizes[1:]:
+        mult *= s
+    xf = _pad_to(x.reshape(-1), mult)
+    out = _flat_all_reduce(xf.astype(jnp.float32), tuple(axes), cfg)
+    n = 1
+    for s in x.shape:
+        n *= s
+    return out[:n].reshape(x.shape).astype(x.dtype)
+
+
+def _psum_fwd(x, axes, cfg, groups, bwd_cfg):
+    return compressed_psum(x, axes, cfg, groups, bwd_cfg), None
+
+
+def _psum_bwd(axes, cfg, groups, bwd_cfg, res, g):
+    del res
+    if bwd_cfg is not None and bwd_cfg.enabled:
+        return (compressed_psum(g, axes, bwd_cfg, groups),)
+    out = g
+    for ax in axes:
+        out = lax.psum(out, ax, axis_index_groups=groups)
+    return (out,)
+
+
+compressed_psum.defvjp(_psum_fwd, _psum_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def dispatch_all_to_all(x: jnp.ndarray, axis: str, cfg: CommConfig,
+                        groups=None):
+    """MoE dispatch A2A with quantized payload; bwd = BF16 A2A (combine
+    direction), i.e. the dispatch quantization is straight-through."""
+    return quantized_all_to_all(x, axis, cfg, groups=groups)
+
+
+def _a2a_fwd(x, axis, cfg, groups):
+    return dispatch_all_to_all(x, axis, cfg, groups), None
+
+
+def _a2a_bwd(axis, cfg, groups, res, g):
+    del res
+    return (lax.all_to_all(g, axis, 0, 0, tiled=True,
+                           axis_index_groups=groups),)
+
+
+dispatch_all_to_all.defvjp(_a2a_fwd, _a2a_bwd)
+
+
+def grad_all_reduce(grads, axes: Sequence[str], cfg: CommConfig,
+                    mean: bool = True):
+    """Gradient sync for a pytree over (data[, pod]) axes — the paper's
+    hierarchical scheme applied to DP gradient AllReduce (outside autodiff).
+    """
+    denom = 1
+    for a in axes:
+        denom *= lax.axis_size(a)
+
+    def one(g):
+        out = compressed_psum(g, tuple(axes), cfg)
+        return out / denom if mean else out
+
+    return jax.tree_util.tree_map(one, grads)

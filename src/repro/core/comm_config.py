@@ -1,0 +1,101 @@
+"""Communication-compression configuration (the paper's per-site knobs).
+
+A ``CommConfig`` describes how a tensor is compressed before it crosses a
+link: bit width (any of 2..8), quantization group size (128 for high bits,
+32 for low bits, per the paper), whether spike reserving is enabled,
+whether scales/zeros are integer-log encoded (``scale_int``), and which
+collective schedule to use (two-step / hierarchical / pipelined
+hierarchical / plain NCCL-equivalent psum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# Bit-splitting decomposition of every supported width into regular units.
+# 4- and 2-bit are the "regular parts"; 1/2-bit remainders are the
+# standalone extra bit planes (paper Fig. 3).
+BIT_UNITS = {
+    1: (1,),
+    2: (2,),
+    3: (2, 1),
+    4: (4,),
+    5: (4, 1),
+    6: (4, 2),
+    7: (4, 2, 1),
+    8: (8,),
+}
+
+SCHEMES = ("nccl", "two_step", "hierarchical", "hier_pp")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Compression + schedule config for one communication site."""
+
+    enabled: bool = True
+    bits: int = 8                 # any of 2..8
+    group: int = 128              # quantization group size (paper: 128 or 32)
+    spike: bool = False           # spike reserving (paper: for INT2/3)
+    scale_int: bool = False       # integer log2 scale/zero codec (theta=10)
+    theta: int = 10               # scale_int linear upscaling factor
+    scheme: str = "two_step"      # collective schedule
+    pipeline_chunks: int = 4      # microchunks for hier_pp
+    # Meta dtype on the wire when scale_int is off (paper: BF16).
+    meta_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.enabled:
+            assert self.bits in BIT_UNITS, f"unsupported bits={self.bits}"
+            assert self.group > 2, "group must hold at least 3 values"
+            assert self.scheme in SCHEMES, f"unknown scheme {self.scheme}"
+            if self.spike:
+                # 2 spikes per group are removed; need codes for the rest.
+                assert self.group >= 4
+
+    # ----- wire-size accounting (exact; used by Table 4/5 benches too) ---
+
+    def payload_bytes(self, n: int) -> int:
+        """Packed quantized-code bytes for n numbers (bit splitting)."""
+        assert n % self.group == 0
+        total = 0
+        for unit in BIT_UNITS[self.bits]:
+            total += (n * unit + 7) // 8
+        return total
+
+    def meta_bytes(self, n: int) -> int:
+        """Scale/zero (+ spikes & indices) bytes for n numbers."""
+        groups = n // self.group
+        if self.scale_int:
+            scale_zero = 2 * groups          # int8 scale + int8 zero
+        else:
+            scale_zero = 2 * 2 * groups      # bf16 scale + bf16 zero
+        spikes = 0
+        if self.spike:
+            # 2 spike values per group (always BF16-exact, paper Fig. 5c)
+            # + 2 indices per group (BF16 baseline; INT8 with scale_int —
+            # paper Table 4: 2560 -> 2048 bytes for 4096 numbers).
+            spikes = 2 * 2 * groups          # bf16 values
+            spikes += 2 * groups * (1 if self.scale_int else 2)
+        return scale_zero + spikes
+
+    def wire_bytes(self, n: int) -> int:
+        return self.payload_bytes(n) + self.meta_bytes(n)
+
+    def compression_ratio(self, n: int) -> float:
+        return (2.0 * n) / self.wire_bytes(n)   # vs BF16
+
+
+# Paper defaults (Setup): group 128 for INT8/6/5, 32 for INT4/3/2,
+# "where INT2 is enabled with spike reserving". INT3_SR exists as an
+# explicit option (Tables 3/7) but is not the default.
+def default_comm_config(bits: int, scheme: str = "two_step",
+                        scale_int: bool = False) -> CommConfig:
+    if bits >= 5:
+        return CommConfig(bits=bits, group=128, spike=False,
+                          scale_int=scale_int, scheme=scheme)
+    return CommConfig(bits=bits, group=32, spike=bits <= 2,
+                      scale_int=scale_int, scheme=scheme)
+
+
+NO_COMPRESSION = CommConfig(enabled=False, scheme="nccl")

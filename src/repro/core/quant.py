@@ -1,0 +1,67 @@
+"""Asymmetric fine-grained round-to-nearest quantization at any bit width.
+
+This is the paper's base quantizer (Tables 1-2): per-group (last axis
+reshaped to ``(..., n_groups, group)``) asymmetric RTN with BF16 scales
+and zeros. ``bits`` may be anything in 2..8 — the packing of irregular
+widths is handled separately by :mod:`repro.core.bitsplit`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def group_reshape(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """(..., n) -> (..., n//group, group). n must divide."""
+    n = x.shape[-1]
+    assert n % group == 0, f"n={n} not divisible by group={group}"
+    return x.reshape(*x.shape[:-1], n // group, group)
+
+
+def group_unreshape(xg: jnp.ndarray) -> jnp.ndarray:
+    return xg.reshape(*xg.shape[:-2], xg.shape[-2] * xg.shape[-1])
+
+
+def quantize(x: jnp.ndarray, bits: int, group: int,
+             meta_dtype=jnp.bfloat16):
+    """Asymmetric RTN. Returns (codes uint8, scale, zero), grouped shapes.
+
+    codes: (..., n_groups, group) uint8 in [0, 2^bits-1]
+    scale/zero: (..., n_groups) meta_dtype
+    """
+    xg = group_reshape(x.astype(jnp.float32), group)
+    qmax = float(2 ** bits - 1)
+    mn = jnp.min(xg, axis=-1)
+    mx = jnp.max(xg, axis=-1)
+    scale = (mx - mn) / qmax
+    # Store meta at wire precision, then quantize *with the stored values*
+    # so encode/decode are self-consistent.
+    scale_w = jnp.maximum(scale, _EPS).astype(meta_dtype)
+    zero_w = mn.astype(meta_dtype)
+    s = scale_w.astype(jnp.float32)[..., None]
+    z = zero_w.astype(jnp.float32)[..., None]
+    codes = jnp.clip(jnp.round((xg - z) / s), 0.0, qmax).astype(jnp.uint8)
+    return codes, scale_w, zero_w
+
+
+def dequantize(codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+               out_dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`quantize`; returns the flat (..., n) tensor."""
+    s = scale.astype(jnp.float32)[..., None]
+    z = zero.astype(jnp.float32)[..., None]
+    xg = codes.astype(jnp.float32) * s + z
+    return group_unreshape(xg).astype(out_dtype)
+
+
+def qdq(x: jnp.ndarray, bits: int, group: int,
+        meta_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """quantize-dequantize (simulation helper for accuracy benches)."""
+    codes, s, z = quantize(x, bits, group, meta_dtype)
+    return dequantize(codes, s, z, out_dtype=x.dtype)
+
+
+def qdq_ste(x: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """QDQ with a straight-through gradient (for training-time use)."""
+    return x + jax.lax.stop_gradient(qdq(x, bits, group) - x)

@@ -1,0 +1,85 @@
+"""Spike Reserving (paper Fig. 5): keep per-group min/max exact.
+
+For each quantization group (paper default 32), the minimum and maximum —
+the "spikes" — are removed from the group, stored exactly (value + int8
+in-group index), and the remaining values are quantized against the
+shrunk range. On dequantization the spikes are scattered back to their
+original positions. This narrows the dynamic range dramatically
+(paper Fig. 4) and makes INT2/INT3 usable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import group_reshape, group_unreshape
+
+_EPS = 1e-12
+
+
+class SpikeQuant(NamedTuple):
+    codes: jnp.ndarray       # (..., n_groups, group) uint8
+    scale: jnp.ndarray       # (..., n_groups) meta dtype
+    zero: jnp.ndarray        # (..., n_groups) meta dtype
+    spike_vals: jnp.ndarray  # (..., n_groups, 2) meta dtype  [min, max]
+    spike_idx: jnp.ndarray   # (..., n_groups, 2) int8 in-group positions
+
+
+def spike_quantize(x: jnp.ndarray, bits: int, group: int,
+                   meta_dtype=jnp.bfloat16) -> SpikeQuant:
+    xg = group_reshape(x.astype(jnp.float32), group)
+    qmax = float(2 ** bits - 1)
+
+    imin = jnp.argmin(xg, axis=-1)
+    # Mask out the min position so imax != imin even for constant groups.
+    pos = jnp.arange(group, dtype=jnp.int32)
+    min_mask = pos == imin[..., None]
+    imax = jnp.argmax(jnp.where(min_mask, -jnp.inf, xg), axis=-1)
+    max_mask = pos == imax[..., None]
+    spike_mask = min_mask | max_mask
+
+    vmin = jnp.take_along_axis(xg, imin[..., None], axis=-1)[..., 0]
+    vmax = jnp.take_along_axis(xg, imax[..., None], axis=-1)[..., 0]
+
+    # Shrunk range over the remaining group-2 values.
+    inner = jnp.where(spike_mask, jnp.nan, xg)
+    mn = jnp.nanmin(inner, axis=-1)
+    mx = jnp.nanmax(inner, axis=-1)
+    scale = (mx - mn) / qmax
+    scale_w = jnp.maximum(scale, _EPS).astype(meta_dtype)
+    zero_w = mn.astype(meta_dtype)
+    s = scale_w.astype(jnp.float32)[..., None]
+    z = zero_w.astype(jnp.float32)[..., None]
+    # Spike slots are set to the new minimum before quantization (paper:
+    # "set them to zeros" of the shrunk range); their codes are dummies
+    # overwritten on dequant.
+    filled = jnp.where(spike_mask, mn[..., None], xg)
+    codes = jnp.clip(jnp.round((filled - z) / s), 0.0, qmax).astype(jnp.uint8)
+
+    spike_vals = jnp.stack([vmin, vmax], axis=-1).astype(meta_dtype)
+    spike_idx = jnp.stack([imin, imax], axis=-1).astype(jnp.int8)
+    return SpikeQuant(codes, scale_w, zero_w, spike_vals, spike_idx)
+
+
+def spike_dequantize(q: SpikeQuant, out_dtype=jnp.float32) -> jnp.ndarray:
+    codes, scale, zero, spike_vals, spike_idx = q
+    s = scale.astype(jnp.float32)[..., None]
+    z = zero.astype(jnp.float32)[..., None]
+    xg = codes.astype(jnp.float32) * s + z
+    # Scatter the exact spikes back (one-hot writes; group is small).
+    group = xg.shape[-1]
+    pos = jnp.arange(group, dtype=jnp.int32)
+    idx = spike_idx.astype(jnp.int32)
+    vals = spike_vals.astype(jnp.float32)
+    for k in range(2):
+        hit = pos == idx[..., k][..., None]
+        xg = jnp.where(hit, vals[..., k][..., None], xg)
+    return group_unreshape(xg).astype(out_dtype)
+
+
+def spike_qdq(x: jnp.ndarray, bits: int, group: int,
+              meta_dtype=jnp.bfloat16) -> jnp.ndarray:
+    return spike_dequantize(spike_quantize(x, bits, group, meta_dtype),
+                            out_dtype=x.dtype)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's fusion hot-spot: QDQ + (un)packing.
+
+The paper fuses quantize+pack (and unpack+dequantize) with the collective
+so only wire bytes touch the link. These kernels are the TPU analogue —
+validated in interpret mode on CPU, targeted at VMEM tiles on TPU.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    fused_dequant_unpack, fused_quant_pack, fused_spike_pack)

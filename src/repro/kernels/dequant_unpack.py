@@ -1,0 +1,73 @@
+"""Fused bit-split unpack + dequantize Pallas kernel (inverse direction).
+
+Reads the packed uint8 wire tile + meta from VMEM, reconstructs codes with
+shift/mask lane ops, applies scale/zero, writes the float tile once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.comm_config import BIT_UNITS
+from repro.kernels.quant_pack import ROW_BLOCK
+
+
+def _unpack_plane(plane: jnp.ndarray, unit: int, n: int) -> jnp.ndarray:
+    """(R, n*unit/8) uint8 -> (R, n) uint8 field values."""
+    if unit == 8:
+        return plane.astype(jnp.uint8)
+    per = 8 // unit
+    mask = jnp.uint8((1 << unit) - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * unit)[None, None, :]
+    vals = (plane[..., None] >> shifts) & mask
+    return vals.reshape(plane.shape[0], n)
+
+
+def _dequant_kernel(payload_ref, scale_ref, zero_ref, out_ref, *,
+                    bits: int, group: int, n: int, out_dtype):
+    rows = payload_ref.shape[0]
+    codes = jnp.zeros((rows, n), jnp.uint8)
+    off = 0
+    shift = 0
+    for unit in BIT_UNITS[bits]:
+        width = n * unit // 8
+        plane = payload_ref[:, off:off + width]
+        field = _unpack_plane(plane, unit, n)
+        codes = codes | ((field.astype(jnp.uint32) << shift)
+                         .astype(jnp.uint8))
+        off += width
+        shift += unit
+    s = scale_ref[...].astype(jnp.float32)[..., None]
+    z = zero_ref[...].astype(jnp.float32)[..., None]
+    xg = codes.reshape(rows, n // group, group).astype(jnp.float32)
+    out_ref[...] = (xg * s + z).reshape(rows, n).astype(out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "group", "n", "out_dtype",
+                                    "interpret"))
+def dequant_unpack(payload: jnp.ndarray, scale: jnp.ndarray,
+                   zero: jnp.ndarray, *, bits: int, group: int, n: int,
+                   out_dtype=jnp.float32, interpret: bool = True):
+    rows = payload.shape[0]
+    assert rows % ROW_BLOCK == 0
+    nbytes = sum(n * u // 8 for u in BIT_UNITS[bits])
+    groups = n // group
+    assert payload.shape == (rows, nbytes)
+    grid = (rows // ROW_BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, bits=bits, group=group, n=n,
+                          out_dtype=jnp.dtype(out_dtype)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, nbytes), lambda r: (r, 0)),
+            pl.BlockSpec((ROW_BLOCK, groups), lambda r: (r, 0)),
+            pl.BlockSpec((ROW_BLOCK, groups), lambda r: (r, 0)),
+        ],
+        out_specs=[pl.BlockSpec((ROW_BLOCK, n), lambda r: (r, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, n), jnp.dtype(out_dtype))],
+        interpret=interpret,
+    )(payload, scale, zero)[0]

@@ -1,0 +1,71 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``use_pallas=None`` (default) picks the Pallas path on TPU and the pure-jnp
+reference path elsewhere; ``interpret`` mode is selected automatically on
+CPU so the kernels stay testable in this container. Row counts are padded
+to ROW_BLOCK transparently.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dequant_unpack import dequant_unpack
+from repro.kernels.quant_pack import ROW_BLOCK, quant_pack
+from repro.kernels.spike_reserve import spike_pack
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _pad_rows(x: jnp.ndarray):
+    rows = x.shape[0]
+    rem = (-rows) % ROW_BLOCK
+    if rem:
+        x = jnp.pad(x, ((0, rem), (0, 0)))
+    return x, rows
+
+
+def fused_quant_pack(x: jnp.ndarray, bits: int, group: int,
+                     use_pallas: bool | None = None):
+    """(R, n) -> (payload, scale, zero). Pallas on TPU, ref elsewhere."""
+    if use_pallas is None:
+        use_pallas = _backend() == "tpu"
+    if not use_pallas:
+        return ref.quant_pack_ref(x, bits, group)
+    xp, rows = _pad_rows(x)
+    p, s, z = quant_pack(xp, bits=bits, group=group,
+                         interpret=_backend() != "tpu")
+    return p[:rows], s[:rows], z[:rows]
+
+
+def fused_dequant_unpack(payload, scale, zero, bits: int, group: int,
+                         n: int, out_dtype=jnp.float32,
+                         use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _backend() == "tpu"
+    if not use_pallas:
+        return ref.dequant_unpack_ref(payload, scale, zero, bits, group, n,
+                                      out_dtype)
+    pp, rows = _pad_rows(payload)
+    sp, _ = _pad_rows(scale)
+    zp, _ = _pad_rows(zero)
+    out = dequant_unpack(pp, sp, zp, bits=bits, group=group, n=n,
+                         out_dtype=out_dtype,
+                         interpret=_backend() != "tpu")
+    return out[:rows]
+
+
+def fused_spike_pack(x: jnp.ndarray, bits: int, group: int,
+                     use_pallas: bool | None = None):
+    """(R, n) -> (payload, scale, zero, spike_vals, spike_idx)."""
+    if use_pallas is None:
+        use_pallas = _backend() == "tpu"
+    if not use_pallas:
+        return ref.spike_pack_ref(x, bits, group)
+    xp, rows = _pad_rows(x)
+    outs = spike_pack(xp, bits=bits, group=group,
+                      interpret=_backend() != "tpu")
+    return tuple(o[:rows] for o in outs)

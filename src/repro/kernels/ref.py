@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These compose the core modules exactly the way the fused kernels do, so
+`assert_allclose(kernel, ref)` is a bit-exact check (uint8 payloads and
+bf16 meta must match exactly; floats to ~1e-6).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitsplit
+from repro.core.quant import dequantize, quantize
+from repro.core.spike import spike_dequantize, spike_quantize
+
+
+def quant_pack_ref(x: jnp.ndarray, bits: int, group: int):
+    """(R, n) float -> (payload (R, n*bits/8) u8, scale, zero (R, n/group))."""
+    codes, scale, zero = quantize(x, bits, group)
+    n = x.shape[-1]
+    payload = bitsplit.pack(codes.reshape(*x.shape[:-1], n), bits)
+    return payload, scale, zero
+
+
+def dequant_unpack_ref(payload: jnp.ndarray, scale: jnp.ndarray,
+                       zero: jnp.ndarray, bits: int, group: int, n: int,
+                       out_dtype=jnp.float32):
+    codes = bitsplit.unpack(payload, bits, n)
+    codes = codes.reshape(*payload.shape[:-1], n // group, group)
+    return dequantize(codes, scale, zero, out_dtype)
+
+
+def spike_pack_ref(x: jnp.ndarray, bits: int, group: int):
+    """Fused spike-reserving quantize + pack.
+
+    Returns (payload, scale, zero, spike_vals (R,G,2), spike_idx (R,G,2)).
+    """
+    q = spike_quantize(x, bits, group)
+    n = x.shape[-1]
+    payload = bitsplit.pack(q.codes.reshape(*x.shape[:-1], n), bits)
+    return payload, q.scale, q.zero, q.spike_vals, q.spike_idx
+
+
+def spike_unpack_ref(payload, scale, zero, spike_vals, spike_idx,
+                     bits: int, group: int, n: int, out_dtype=jnp.float32):
+    from repro.core.spike import SpikeQuant
+    codes = bitsplit.unpack(payload, bits, n)
+    codes = codes.reshape(*payload.shape[:-1], n // group, group)
+    return spike_dequantize(
+        SpikeQuant(codes, scale, zero, spike_vals, spike_idx), out_dtype)

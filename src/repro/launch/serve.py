@@ -1,0 +1,98 @@
+"""Serving launcher: batched prefill + decode loop (greedy).
+
+Example (CPU, reduced arch — deliverable b):
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \
+      --batch 4 --prompt-len 32 --gen 16 --policy paper
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.policy import BF16_POLICY, aggressive_policy, paper_policy
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import param_groups
+from repro.parallel.plan import make_plan
+from repro.parallel.shardings import build_store
+from repro.train.data import DataConfig, make_dataset, to_device
+from repro.train.serve_step import (make_cache_init, make_decode_step,
+                                    make_prefill)
+
+POLICIES = {"paper": paper_policy, "bf16": lambda: BF16_POLICY,
+            "aggressive": aggressive_policy}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", default="1,1")
+    ap.add_argument("--policy", default="paper", choices=list(POLICIES))
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    data_n, model_n = (int(x) for x in args.mesh.split(","))
+    mesh = make_test_mesh(data=data_n, model=model_n)
+    plan = make_plan(cfg, tp=model_n, fsdp=data_n)
+    policy = POLICIES[args.policy]()
+    cache_len = args.prompt_len + args.gen
+
+    store = build_store(param_groups(cfg, plan), plan,
+                        jax.random.PRNGKey(0), jnp.float32, mesh)
+
+    enc = cfg.encoder.n_ctx if (cfg.is_enc_dec or cfg.has_cross) else None
+    ds = make_dataset(DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
+                                 global_batch=args.batch, enc_ctx=enc,
+                                 d_model=cfg.d_model))
+    batch = to_device(ds.batch(0))
+    prompts = batch["tokens"]
+
+    # ---- TTFT: prefill (paper Fig. 2 site) ----
+    prefill = make_prefill(cfg, plan, policy, mesh, args.batch)
+    pb = {"tokens": prompts}
+    if enc:
+        pb["enc_embeds"] = batch["enc_embeds"]
+    t0 = time.time()
+    first = prefill(store, pb)
+    first.block_until_ready()
+    ttft = time.time() - t0
+    print(f"[serve] TTFT (prefill {args.prompt_len} toks x{args.batch}, "
+          f"policy={args.policy}): {ttft*1000:.1f} ms (incl. compile)")
+
+    # ---- decode loop: feed prompt tokens into the cache, then generate --
+    init = make_cache_init(cfg, plan, mesh, args.batch, cache_len)
+    caches = init()
+    step = make_decode_step(cfg, plan, policy, mesh, args.batch, cache_len)
+    out = []
+    tok = prompts[:, :1]
+    t0 = time.time()
+    for i in range(args.prompt_len + args.gen - 1):
+        db = {"tokens": tok.astype(jnp.int32)}
+        if enc:
+            db["enc_embeds"] = batch["enc_embeds"]
+        nt, caches = step(store, caches, db)
+        if i + 1 < args.prompt_len:
+            tok = prompts[:, i + 1:i + 2]       # teacher-forced prompt
+        else:
+            tok = jnp.asarray(nt)[:, None]
+            out.append(np.asarray(nt))
+    dt = time.time() - t0
+    gen = np.stack(out, 1) if out else np.zeros((args.batch, 0), np.int32)
+    steps = args.prompt_len + args.gen - 1
+    print(f"[serve] {steps} decode steps in {dt:.1f}s "
+          f"({dt/steps*1000:.1f} ms/step incl. compile)")
+    print(f"[serve] generated tokens (first row): {gen[0][:16]}")
+    assert np.all((gen >= 0) & (gen < cfg.vocab))
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

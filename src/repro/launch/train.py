@@ -1,0 +1,106 @@
+"""Training launcher.
+
+Runs real training on whatever devices exist (CPU smoke / a TPU slice);
+the mesh shape adapts: ``--mesh data,model`` or ``--production``
+(16x16 / 2x16x16, which on this CPU container only makes sense under
+``--dryrun`` — use launch/dryrun.py for that path).
+
+Example (CPU, reduced arch, a few hundred steps — deliverable b):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+      --steps 300 --seq 128 --batch 8 --policy paper --ckpt /tmp/ck.npz
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.policy import BF16_POLICY, aggressive_policy, paper_policy
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import param_groups
+from repro.parallel.plan import make_plan
+from repro.parallel.shardings import build_store
+from repro.train import checkpoint as ckpt_lib
+from repro.train.data import DataConfig, make_dataset, to_device
+from repro.train.optim import OptimConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+POLICIES = {"paper": paper_policy, "bf16": lambda: BF16_POLICY,
+            "aggressive": aggressive_policy}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default="1,1",
+                    help="data,model sizes (devices must exist)")
+    ap.add_argument("--policy", default="paper", choices=list(POLICIES))
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    data_n, model_n = (int(x) for x in args.mesh.split(","))
+    mesh = make_test_mesh(data=data_n, model=model_n)
+    plan = make_plan(cfg, tp=model_n, fsdp=data_n)
+    policy = POLICIES[args.policy]()
+    opt_cfg = OptimConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                          total_steps=args.steps)
+
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params "
+          f"({cfg.active_param_count()/1e6:.1f}M active), mesh "
+          f"{dict(mesh.shape)}, policy={args.policy}")
+
+    if args.resume:
+        store, opt, start = ckpt_lib.restore(args.resume, mesh)
+        print(f"[train] resumed from {args.resume} @ step {start}")
+    else:
+        store = build_store(param_groups(cfg, plan), plan,
+                            jax.random.PRNGKey(0), jnp.float32, mesh)
+        opt = init_train_state(store, opt_cfg)
+        start = 0
+
+    step_fn = make_train_step(cfg, plan, policy, opt_cfg, mesh,
+                              global_batch=args.batch,
+                              n_micro=args.n_micro)
+    enc = cfg.encoder.n_ctx if (cfg.is_enc_dec or cfg.has_cross) else None
+    ds = make_dataset(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                 global_batch=args.batch, enc_ctx=enc,
+                                 d_model=cfg.d_model))
+    t0 = time.time()
+    history = []
+    for i in range(start, args.steps):
+        batch = to_device(ds.batch(i))
+        store, opt, metrics = step_fn(store, opt, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            loss = float(metrics["loss"])
+            history.append({"step": i, "loss": loss,
+                            "grad_norm": float(metrics["grad_norm"]),
+                            "lr": float(metrics["lr"])})
+            dt = time.time() - t0
+            print(f"[train] step {i:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:6.1f}s)",
+                  flush=True)
+    if args.ckpt:
+        ckpt_lib.save(args.ckpt, store, opt, args.steps)
+        print(f"[train] saved checkpoint to {args.ckpt}")
+    print(json.dumps({"first_loss": history[0]["loss"],
+                      "last_loss": history[-1]["loss"]}))
+    return store, opt, history
+
+
+if __name__ == "__main__":
+    main()

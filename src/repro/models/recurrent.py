@@ -1,0 +1,280 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma/Griffin), mLSTM and sLSTM
+(xLSTM). All are channel/head-sharded over the model axis; sequence
+mixing is a diagonal linear recurrence (RG-LRU -> ``associative_scan``,
+the TPU-native parallel-scan form) or a gated nonlinear recurrence
+(m/sLSTM -> ``lax.scan``). Decode carries a small recurrent state instead
+of a KV cache, which is what makes these archs run ``long_500k``
+natively (constant memory in sequence length).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.policy import CommPolicy
+from repro.models.config import ModelConfig
+from repro.models.layers import gelu, tp_psum
+from repro.parallel.plan import ShardingPlan
+from repro.parallel.shardings import ParamSpec
+
+_C_RGLRU = 8.0
+
+
+# ===========================================================================
+# RG-LRU (Griffin recurrent block)
+# ===========================================================================
+
+def rglru_specs(cfg: ModelConfig, plan: ShardingPlan,
+                prefix: str = "rg_") -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    w = plan.lru_loc * plan.tp            # padded global lru width
+    cw = cfg.conv_width
+    return {
+        prefix + "wx": ParamSpec((d, w), tp_dim=1),
+        prefix + "wg": ParamSpec((d, w), tp_dim=1),
+        prefix + "conv_w": ParamSpec((cw, w), tp_dim=1),
+        prefix + "conv_b": ParamSpec((w,), tp_dim=0, init="zeros"),
+        prefix + "wi": ParamSpec((w,), tp_dim=0, init="zeros"),
+        prefix + "bi": ParamSpec((w,), tp_dim=0, init="zeros"),
+        prefix + "wr": ParamSpec((w,), tp_dim=0, init="zeros"),
+        prefix + "br": ParamSpec((w,), tp_dim=0, init="zeros"),
+        prefix + "lam": ParamSpec((w,), tp_dim=0, init="lru_lambda"),
+        prefix + "wo": ParamSpec((w, d), tp_dim=0, init="zeros"),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray]):
+    """Depthwise causal conv over S. u (B,S,W), w (cw,W).
+    state (B,cw-1,W) holds the trailing inputs for decode."""
+    cw = w.shape[0]
+    if state is None:
+        hist = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(hist[:, i:i + u.shape[1], :] * w[i] for i in range(cw)) + b
+    new_state = hist[:, -(cw - 1):, :] if cw > 1 else None
+    return out.astype(u.dtype), new_state
+
+
+def rglru_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                plan: ShardingPlan, policy: CommPolicy,
+                state: Optional[Dict] = None, prefix: str = "rg_"
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x (B,S,d) -> (B,S,d). state={'h','conv'} for decode (S=1)."""
+    u = jnp.einsum("bsd,dw->bsw", x, p[prefix + "wx"])
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, p[prefix + "conv_w"],
+                               p[prefix + "conv_b"], conv_state)
+    uf = u.astype(jnp.float32)
+    i = jax.nn.sigmoid(uf * p[prefix + "wi"].astype(jnp.float32)
+                       + p[prefix + "bi"].astype(jnp.float32))
+    rgate = jax.nn.sigmoid(uf * p[prefix + "wr"].astype(jnp.float32)
+                           + p[prefix + "br"].astype(jnp.float32))
+    log_a = -_C_RGLRU * rgate * jax.nn.softplus(
+        p[prefix + "lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * uf)
+
+    if state is None:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        _, h = lax.associative_scan(combine, (a, gated), axis=1)
+        new_state = None
+    else:
+        h = a[:, 0] * state["h"].astype(jnp.float32) + gated[:, 0]
+        new_state = {"h": h, "conv": new_conv}
+        h = h[:, None]
+
+    g = gelu(jnp.einsum("bsd,dw->bsw", x, p[prefix + "wg"]))
+    y = (h.astype(x.dtype) * g)
+    y = jnp.einsum("bsw,wd->bsd", y, p[prefix + "wo"])
+    return tp_psum(y, policy).astype(x.dtype), new_state
+
+
+def rglru_init_state(cfg: ModelConfig, plan: ShardingPlan, batch: int):
+    w = plan.lru_loc
+    cw = cfg.conv_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, w), jnp.float32)}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory cell)
+# ===========================================================================
+
+def mlstm_specs(cfg: ModelConfig, plan: ShardingPlan,
+                prefix: str = "ml_") -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    nhp = plan.nh_lstm_pad
+    dh = d // cfg.n_heads
+    inner = nhp * dh
+    return {
+        prefix + "wq": ParamSpec((d, inner), tp_dim=1),
+        prefix + "wk": ParamSpec((d, inner), tp_dim=1),
+        prefix + "wv": ParamSpec((d, inner), tp_dim=1),
+        prefix + "wi": ParamSpec((d, nhp), tp_dim=1),
+        prefix + "wf": ParamSpec((d, nhp), tp_dim=1),
+        prefix + "wog": ParamSpec((d, inner), tp_dim=1),
+        prefix + "wo": ParamSpec((inner, d), tp_dim=0, init="zeros"),
+    }
+
+
+def _mlstm_step(carry, xs):
+    c, n, mstate = carry                    # (B,H,dh,dh), (B,H,dh), (B,H)
+    q, k, v, it, ft = xs                    # (B,H,dh) x3, (B,H) x2
+    m_new = jnp.maximum(ft + mstate, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + mstate - m_new)
+    c = fp[..., None, None] * c + ip[..., None, None] * (
+        v[..., :, None] * k[..., None, :])            # outer(v,k)
+    n = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (c, n, m_new), h
+
+
+def mlstm_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                plan: ShardingPlan, policy: CommPolicy,
+                state: Optional[Dict] = None, prefix: str = "ml_"
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    b, s, d = x.shape
+    nh = plan.nh_lstm_loc
+    dh = d // cfg.n_heads
+    rank = lax.axis_index("model")
+    valid = (rank * nh + jnp.arange(nh)) < cfg.n_heads
+
+    scale = 1.0 / jnp.sqrt(float(dh))
+    q = jnp.einsum("bsd,di->bsi", x, p[prefix + "wq"]).reshape(
+        b, s, nh, dh).astype(jnp.float32) * scale
+    k = jnp.einsum("bsd,di->bsi", x, p[prefix + "wk"]).reshape(
+        b, s, nh, dh).astype(jnp.float32) * scale
+    v = jnp.einsum("bsd,di->bsi", x, p[prefix + "wv"]).reshape(
+        b, s, nh, dh).astype(jnp.float32)
+    it = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wi"]).astype(jnp.float32)
+    ft = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, p[prefix + "wf"]).astype(jnp.float32))
+
+    if state is None:
+        init = (jnp.zeros((b, nh, dh, dh), jnp.float32),
+                jnp.zeros((b, nh, dh), jnp.float32),
+                jnp.full((b, nh), -1e30, jnp.float32))
+        xs = tuple(a.transpose(1, 0, 2, 3) for a in (q, k, v)) + tuple(
+            a.transpose(1, 0, 2) for a in (it, ft))
+        (_, _, _), hs = lax.scan(_mlstm_step, init, xs)
+        h = hs.transpose(1, 0, 2, 3)                   # (B,S,H,dh)
+        new_state = None
+    else:
+        carry = (state["c"], state["n"], state["m"])
+        xs = (q[:, 0], k[:, 0], v[:, 0], it[:, 0], ft[:, 0])
+        (c, n, mm), h1 = _mlstm_step(carry, xs)
+        new_state = {"c": c, "n": n, "m": mm}
+        h = h1[:, None]
+
+    og = jax.nn.sigmoid(jnp.einsum("bsd,di->bsi", x, p[prefix + "wog"]))
+    h = h.reshape(b, -1, nh, dh) * valid[None, None, :, None]
+    y = h.reshape(b, -1, nh * dh).astype(x.dtype) * og
+    y = jnp.einsum("bsi,id->bsd", y, p[prefix + "wo"])
+    return tp_psum(y, policy).astype(x.dtype), new_state
+
+
+def mlstm_init_state(cfg: ModelConfig, plan: ShardingPlan, batch: int):
+    nh = plan.nh_lstm_loc
+    dh = cfg.d_model // cfg.n_heads
+    return {"c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar cell, block-diagonal recurrence per head)
+# ===========================================================================
+
+def slstm_specs(cfg: ModelConfig, plan: ShardingPlan,
+                prefix: str = "sl_") -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    nhp = plan.nh_lstm_pad
+    dh = d // cfg.n_heads
+    inner = nhp * dh
+    s = {}
+    for g in ("z", "i", "f", "o"):
+        s[prefix + "w" + g] = ParamSpec((d, inner), tp_dim=1)
+        s[prefix + "r" + g] = ParamSpec((nhp, dh, dh), tp_dim=0)
+        s[prefix + "b" + g] = ParamSpec((inner,), tp_dim=0, init="zeros")
+    # NB: "wout", not "wo" — "wo" is the output *gate* above.
+    s[prefix + "wout"] = ParamSpec((inner, d), tp_dim=0, init="zeros")
+    return s
+
+
+def _slstm_step(p, prefix, carry, xs):
+    c, n, h, mstate = carry                  # (B,H,dh) x3, (B,H,dh)
+    xz, xi, xf, xo = xs                      # (B,H,dh) each
+
+    def rec(g, hh):
+        return jnp.einsum("bhj,hjk->bhk", hh, p[prefix + "r" + g])
+
+    zt = jnp.tanh(xz + rec("z", h))
+    it = xi + rec("i", h)
+    ft = jax.nn.log_sigmoid(xf + rec("f", h))
+    ot = jax.nn.sigmoid(xo + rec("o", h))
+    m_new = jnp.maximum(ft + mstate, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + mstate - m_new)
+    c = fp * c + ip * zt
+    n = fp * n + ip
+    h_new = ot * (c / jnp.maximum(n, 1e-6))
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                plan: ShardingPlan, policy: CommPolicy,
+                state: Optional[Dict] = None, prefix: str = "sl_"
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    b, s, d = x.shape
+    nh = plan.nh_lstm_loc
+    dh = d // cfg.n_heads
+    rank = lax.axis_index("model")
+    valid = (rank * nh + jnp.arange(nh)) < cfg.n_heads
+
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gg = jnp.einsum("bsd,di->bsi", x, p[prefix + "w" + g]) \
+            + p[prefix + "b" + g]
+        gates[g] = gg.reshape(b, s, nh, dh).astype(jnp.float32)
+
+    step = lambda carry, xs: _slstm_step(p, prefix, carry, xs)
+    if state is None:
+        init = (jnp.zeros((b, nh, dh), jnp.float32),
+                jnp.zeros((b, nh, dh), jnp.float32),
+                jnp.zeros((b, nh, dh), jnp.float32),
+                jnp.full((b, nh, dh), -1e30, jnp.float32))
+        xs = tuple(gates[g].transpose(1, 0, 2, 3) for g in "zifo")
+        _, hs = lax.scan(step, init, xs)
+        h = hs.transpose(1, 0, 2, 3)
+        new_state = None
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+        (c, n, hh, mm), h1 = step(
+            carry, tuple(gates[g][:, 0] for g in "zifo"))
+        new_state = {"c": c, "n": n, "h": hh, "m": mm}
+        h = h1[:, None]
+
+    h = h * valid[None, None, :, None]
+    y = h.reshape(b, -1, nh * dh).astype(x.dtype)
+    y = jnp.einsum("bsi,id->bsd", y, p[prefix + "wout"])
+    return tp_psum(y, policy).astype(x.dtype), new_state
+
+
+def slstm_init_state(cfg: ModelConfig, plan: ShardingPlan, batch: int):
+    nh = plan.nh_lstm_loc
+    dh = cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}

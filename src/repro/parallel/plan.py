@@ -1,0 +1,126 @@
+"""ShardingPlan: how each architecture maps onto the (data, model) mesh.
+
+Distribution strategy (manual, inside shard_map — we own every collective
+because the collectives are the paper's subject):
+
+* **TP** over the ``model`` axis: attention heads, FFN hidden, vocab,
+  LRU channels, experts. Head counts / widths are zero-padded up to the
+  axis size where needed; padded heads have zero out-proj rows so they
+  are exact no-ops.
+* **GQA**: kv heads are sharded when ``n_kv % tp == 0`` and ``tp <= n_kv``
+  (Megatron style), otherwise the (small) kv projections are replicated
+  per rank and each rank's q heads index into the full kv set.
+* **EP**: the model axis is factorized ``tp = ep * etp`` (ep-major):
+  rank ``m = ep_idx * etp + tp_idx`` owns experts ``[ep_idx*e_loc, ...)``
+  TP-sharded ``etp`` ways. Collectives use ``axis_index_groups`` so the
+  canonical 2-axis production mesh never changes.
+* **FSDP/ZeRO-3 flat store**: every parameter is stored as
+  ``(n_stack, tp, flat)`` — dim1 = the rank's TP-local values, flattened
+  and zero-padded to an fsdp*quant-group multiple, dim2 sharded over
+  ``data``. One PartitionSpec for *all* params: ``P(None,'model','data')``.
+  The forward gathers dim2 (contiguous => directly quantizable with the
+  paper's wire codec — the ZeRO++-style beyond-paper extension) and
+  reshapes to the logical TP-local shape; the gather's transpose is a
+  reduce-scatter, which lands gradients pre-sharded for the ZeRO
+  optimizer.
+* **DP** over ``data`` (batch) and ``pod`` (multi-pod). FSDP grads are
+  reduced over ``data`` by the gather-transpose; the remaining ``pod``
+  reduction uses the paper's hierarchical quantized AllReduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+# flat shards are padded so quantized FSDP-gather groups always divide.
+FLAT_QUANT_GROUP = 128
+
+
+def pad_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEPlan:
+    ep: int                       # expert-parallel ways (groups of ranks)
+    etp: int                      # tensor-parallel ways within an expert
+    e_loc: int                    # experts owned per rank
+    ef_loc: int                   # expert d_ff per rank
+    ep_groups: Tuple[Tuple[int, ...], ...]   # A2A groups (size ep each)
+    etp_groups: Tuple[Tuple[int, ...], ...]  # psum groups (size etp each)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    tp: int
+    fsdp: int
+    # attention
+    hq_pad: int
+    hq_loc: int
+    kv_mode: str                  # "shard" | "replicate"
+    kv_loc: int                   # kv heads held per rank
+    # widths
+    f_loc: int                    # dense FFN hidden per rank
+    vocab_pad: int
+    v_loc: int
+    lru_loc: int
+    nh_lstm_pad: int              # xlstm heads padded to tp
+    nh_lstm_loc: int
+    moe: Optional[MoEPlan]
+
+    @property
+    def axes(self):
+        return ("data", "model")
+
+
+def make_plan(cfg: ModelConfig, tp: int, fsdp: int) -> ShardingPlan:
+    assert cfg.d_model % fsdp == 0, (cfg.name, cfg.d_model, fsdp)
+    hd = cfg.hd
+    hq_pad = pad_to(cfg.n_heads, tp)
+    hq_loc = hq_pad // tp
+    if cfg.n_kv_heads % tp == 0 or tp <= cfg.n_kv_heads:
+        assert cfg.n_kv_heads % tp == 0, \
+            f"{cfg.name}: kv={cfg.n_kv_heads} not divisible by tp={tp}"
+        kv_mode, kv_loc = "shard", cfg.n_kv_heads // tp
+    else:
+        kv_mode, kv_loc = "replicate", cfg.n_kv_heads
+
+    f_pad = pad_to(cfg.d_ff, tp) if cfg.d_ff else 0
+    vocab_pad = pad_to(cfg.vocab, tp)
+    lru = cfg.lru_width or cfg.d_model
+    lru_pad = pad_to(lru, tp)
+
+    moe_plan = None
+    if cfg.moe is not None:
+        e = cfg.moe.n_experts
+        ep = math.gcd(e, tp)      # largest expert-parallel ways dividing tp
+        etp = tp // ep
+        e_loc = e // ep
+        ef_loc = pad_to(cfg.moe.d_ff, etp) // etp
+        ep_groups = tuple(
+            tuple(ei * etp + ti for ei in range(ep)) for ti in range(etp))
+        etp_groups = tuple(
+            tuple(ei * etp + ti for ti in range(etp)) for ei in range(ep))
+        moe_plan = MoEPlan(ep, etp, e_loc, ef_loc, ep_groups, etp_groups)
+
+    # xlstm heads (4) padded to the axis; padded heads are exact no-ops.
+    nh_lstm_pad = pad_to(max(cfg.n_heads, 1), tp)
+
+    return ShardingPlan(
+        tp=tp, fsdp=fsdp,
+        hq_pad=hq_pad, hq_loc=hq_loc, kv_mode=kv_mode, kv_loc=kv_loc,
+        f_loc=f_pad // tp if f_pad else 0,
+        vocab_pad=vocab_pad, v_loc=vocab_pad // tp,
+        lru_loc=lru_pad // tp,
+        nh_lstm_pad=nh_lstm_pad, nh_lstm_loc=nh_lstm_pad // tp,
+        moe=moe_plan,
+    )
+
+
+def flat_store_len(numel_loc: int, fsdp: int) -> int:
+    """Stored flat length per rank: padded so the fsdp shard is a whole
+    number of quant groups (keeps the ZeRO++ quantized gather legal)."""
+    return pad_to(numel_loc, fsdp * FLAT_QUANT_GROUP)

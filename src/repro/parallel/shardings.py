@@ -1,0 +1,219 @@
+"""Flat ZeRO-3 parameter store + quantized FSDP gather.
+
+Every parameter lives in storage form ``(n_stack, tp, flat)``:
+
+* dim0 — stacked pattern repeats (1 for unstacked groups), scanned over;
+* dim1 — the TP rank's local values (heads / hidden / vocab / expert
+  slice already applied), flattened;
+* dim2 — zero-padded flat payload, sharded over the ``data`` axis.
+
+One PartitionSpec covers the whole tree: ``P(None, "model", "data")``.
+Inside ``shard_map`` the per-rank view is ``(n_stack, 1, flat/fsdp)``;
+``gather_flat`` all-gathers dim2 (optionally through the paper's wire
+codec — ZeRO++-style quantized weight gather, a beyond-paper extension)
+and reshapes to the logical local shape. Its transpose is a
+reduce-scatter, which lands gradients exactly where the ZeRO optimizer
+shards live.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import codec
+from repro.core.comm_config import CommConfig
+from repro.parallel.plan import ShardingPlan, flat_store_len
+
+STORE_SPEC = P(None, "model", "data")
+
+
+def store_spec(plan=None):
+    """Storage PartitionSpec. fsdp=1 (serving mode for models whose
+    TP-local weights fit HBM): dim2 replicated — no per-layer gather."""
+    if plan is not None and plan.fsdp == 1:
+        return P(None, "model", None)
+    return STORE_SPEC
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Global logical shape + how it maps to a TP rank."""
+    shape: Tuple[int, ...]
+    tp_dim: Optional[int] = None      # dim sharded over model axis
+    init: str = "fan_in"              # fan_in | zeros | ones | lru_lambda
+    # experts: "in" = (E, d, F) with F over etp; "out" = (E, F, d).
+    # E is sharded over ep; rank m = ep_idx*etp + tp_idx.
+    moe_fold: Optional[str] = None
+
+    def local_shape(self, plan: ShardingPlan) -> Tuple[int, ...]:
+        if self.moe_fold is not None:
+            m = plan.moe
+            if self.moe_fold == "in":
+                e, d, f = self.shape
+                return (m.e_loc, d, f // m.etp)
+            e, f, d = self.shape
+            return (m.e_loc, f // m.etp, d)
+        if self.tp_dim is None:
+            return self.shape
+        s = list(self.shape)
+        assert s[self.tp_dim] % plan.tp == 0, (self.shape, self.tp_dim)
+        s[self.tp_dim] //= plan.tp
+        return tuple(s)
+
+    def numel_loc(self, plan: ShardingPlan) -> int:
+        return math.prod(self.local_shape(plan))
+
+    def flat_len(self, plan: ShardingPlan) -> int:
+        return flat_store_len(self.numel_loc(plan), plan.fsdp)
+
+
+def _init_values(spec: ParamSpec, key, rank: int, plan: ShardingPlan,
+                 dtype) -> jnp.ndarray:
+    """Per-rank local values. TP-sliced params fold the rank into the key
+    (slices are independent); replicated params share the key so every
+    rank holds identical values."""
+    shape = spec.local_shape(plan)
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    k = key if (spec.tp_dim is None and spec.moe_fold is None) \
+        else jax.random.fold_in(key, rank)
+    if spec.init == "lru_lambda":
+        # RG-LRU: a = exp(-c*softplus(L)*r); init recurrence ~U(0.9, 0.999)
+        u = jax.random.uniform(k, shape, jnp.float32, 0.9, 0.999)
+        lam = jnp.log(jnp.exp(-jnp.log(u) / 8.0) - 1.0)  # inv softplus
+        return lam.astype(dtype)
+    # fan_in normal
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_store_rank(specs: Dict[str, ParamSpec], key, rank: int,
+                    plan: ShardingPlan, n_stack: int, stack_idx: int,
+                    dtype) -> Dict[str, jnp.ndarray]:
+    """One rank's flat payloads for one stack index (used by the builder)."""
+    out = {}
+    for name, spec in sorted(specs.items()):
+        k = jax.random.fold_in(jax.random.fold_in(key, stack_idx),
+                               hash(name) % (2 ** 31))
+        v = _init_values(spec, k, rank, plan, dtype).reshape(-1)
+        pad = spec.flat_len(plan) - v.shape[0]
+        out[name] = jnp.pad(v, (0, pad))
+    return out
+
+
+# --------------------------------------------------------------------------
+# FSDP gather (differentiable, optionally quantized)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def fsdp_all_gather(x: jnp.ndarray, axis: str, cfg: Optional[CommConfig],
+                    bwd_cfg: Optional[CommConfig] = None):
+    """(flat/fsdp,) -> (flat,) over the data axis.
+
+    cfg=None/disabled -> plain all_gather. Enabled -> the paper's wire
+    codec compresses the gathered weights (ZeRO++-style qAG). Transpose
+    is a reduce-scatter (lands grads ZeRO-sharded); ``bwd_cfg`` optionally
+    compresses that gradient RS too (ZeRO++'s third technique, realized
+    with the paper's wire codec).
+    """
+    if cfg is None or not cfg.enabled:
+        return lax.all_gather(x, axis, axis=0, tiled=True)
+    wire = codec.encode(x, cfg)
+    allw = lax.all_gather(wire, axis, axis=0)
+    return codec.decode(allw, cfg, x.shape[-1],
+                        out_dtype=x.dtype).reshape(-1)
+
+
+def _ag_fwd(x, axis, cfg, bwd_cfg):
+    return fsdp_all_gather(x, axis, cfg, bwd_cfg), None
+
+
+def _ag_bwd(axis, cfg, bwd_cfg, res, g):
+    del res
+    if bwd_cfg is not None and bwd_cfg.enabled:
+        from repro.core.collectives import quantized_reduce_scatter
+        n = g.shape[-1]
+        if n % (lax.axis_size(axis) * bwd_cfg.group) == 0:
+            return (quantized_reduce_scatter(
+                g.astype(jnp.float32), axis, bwd_cfg).astype(g.dtype),)
+    return (lax.psum_scatter(g, axis, scatter_dimension=0, tiled=True),)
+
+
+fsdp_all_gather.defvjp(_ag_fwd, _ag_bwd)
+
+
+def gather_param(flat_view: jnp.ndarray, spec: ParamSpec,
+                 plan: ShardingPlan, dtype,
+                 qag: Optional[CommConfig] = None,
+                 qgrad: Optional[CommConfig] = None) -> jnp.ndarray:
+    """Per-rank storage view (1, flat/fsdp) -> logical local array."""
+    if plan.fsdp == 1:           # serving mode: weights resident
+        flat = flat_view.reshape(-1)
+    else:
+        flat = fsdp_all_gather(flat_view.reshape(-1), "data", qag, qgrad)
+    shape = spec.local_shape(plan)
+    n = math.prod(shape)
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def gather_group(views: Dict[str, jnp.ndarray],
+                 specs: Dict[str, ParamSpec], plan: ShardingPlan, dtype,
+                 qag: Optional[CommConfig] = None,
+                 qgrad: Optional[CommConfig] = None
+                 ) -> Dict[str, jnp.ndarray]:
+    return {name: gather_param(views[name], specs[name], plan, dtype,
+                               qag, qgrad)
+            for name in specs}
+
+
+# --------------------------------------------------------------------------
+# storage construction (real arrays for tests/examples; abstract for dryrun)
+# --------------------------------------------------------------------------
+
+def store_shapes(groups: Dict[str, Tuple[int, Dict[str, ParamSpec]]],
+                 plan: ShardingPlan, dtype
+                 ) -> Dict[str, Dict[str, jax.ShapeDtypeStruct]]:
+    """{group: (n_stack, specs)} -> ShapeDtypeStructs in storage form."""
+    out = {}
+    for gname, (n_stack, specs) in groups.items():
+        out[gname] = {
+            name: jax.ShapeDtypeStruct(
+                (n_stack, plan.tp, spec.flat_len(plan)), dtype)
+            for name, spec in sorted(specs.items())}
+    return out
+
+
+def build_store(groups, plan: ShardingPlan, key, dtype,
+                mesh=None) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Materialize storage arrays (host build; fine at test scale)."""
+    out = {}
+    for gi, (gname, (n_stack, specs)) in enumerate(sorted(groups.items())):
+        gkey = jax.random.fold_in(key, gi)
+        acc = {name: [] for name in specs}
+        for si in range(n_stack):
+            per_rank = []
+            for r in range(plan.tp):
+                per_rank.append(init_store_rank(specs, gkey, r, plan,
+                                                n_stack, si, dtype))
+            for name in specs:
+                acc[name].append(jnp.stack([pr[name] for pr in per_rank]))
+        arrs = {name: jnp.stack(acc[name]) for name in specs}
+        if mesh is not None:
+            sharding = jax.sharding.NamedSharding(mesh, STORE_SPEC)
+            arrs = {n: jax.device_put(a, sharding) for n, a in arrs.items()}
+        out[gname] = arrs
+    return out

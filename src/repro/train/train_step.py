@@ -1,0 +1,162 @@
+"""Training step: forward/backward inside shard_map + ZeRO update.
+
+Gradient communication map (all sites use the paper's machinery):
+
+  within pod   FSDP gather transpose -> reduce-scatter over ``data``
+               (sums DP grads and lands them ZeRO-sharded; this plays the
+               "partial ReduceScatter inside the fast domain" role of the
+               paper's hierarchical scheme)
+  across pods  quantized two-step AllReduce over ``pod`` on the sharded
+               flat grads (only 1/fsdp of the volume crosses the slow
+               bridge — the Table 5 saving, realized structurally)
+  model axis   replicated-stored params (norms, biases, routers,
+               replicated kv projections) get an exact psum to keep the
+               TP copies in sync (Megatron's LN-grad all-reduce)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.collectives import compressed_psum
+from repro.core.comm_config import CommConfig
+from repro.core.policy import CommPolicy
+from repro.models.config import ModelConfig
+from repro.models.model import forward, lm_loss, param_groups
+from repro.parallel.plan import ShardingPlan
+from repro.parallel.shardings import STORE_SPEC
+from repro.train.optim import (OptimConfig, adamw_update, global_grad_norm,
+                               init_opt_state)
+
+
+def batch_spec(global_batch: int, mesh) -> P:
+    """Shard the batch over (pod, data) when divisible, else replicate."""
+    names = mesh.axis_names
+    dp = [a for a in ("pod", "data") if a in names]
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if global_batch % size == 0:
+        return P(tuple(dp))
+    if "data" in dp and global_batch % mesh.shape["data"] == 0:
+        return P(("data",))
+    return P()
+
+
+def _replicated_mask(cfg: ModelConfig, plan: ShardingPlan) -> Dict:
+    """Pytree of bools: which stored params are TP-replicated copies."""
+    groups = param_groups(cfg, plan)
+    return {g: {n: (sp.tp_dim is None and sp.moe_fold is None)
+                for n, sp in specs.items()}
+            for g, (k, specs) in groups.items()}
+
+
+def make_loss_fn(cfg: ModelConfig, plan: ShardingPlan, policy: CommPolicy,
+                 multi_pod: bool, n_micro: int = 1,
+                 aux_weight: float = 0.01):
+    """Per-rank (store_views, batch) -> (seed_loss, raw_loss)."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def one_micro(views, tokens, labels, enc_embeds):
+        hidden, unemb, aux, _ = forward(
+            views, tokens, cfg, plan, policy,
+            enc_embeds=enc_embeds, dtype=dtype)
+        return lm_loss(hidden, unemb, labels, cfg, plan, aux, aux_weight)
+
+    def loss_fn(views, batch):
+        denom = lax.axis_size("model") * lax.axis_size("data")
+        if multi_pod:
+            denom *= lax.axis_size("pod")
+        tokens, labels = batch["tokens"], batch["labels"]
+        enc = batch.get("enc_embeds")
+        if n_micro == 1:
+            raw = one_micro(views, tokens, labels, enc)
+        else:
+            b = tokens.shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+            mb = b // n_micro
+            raw = jnp.zeros((), jnp.float32)
+            for i in range(n_micro):
+                sl = lambda a: lax.dynamic_slice_in_dim(a, i * mb, mb, 0) \
+                    if a is not None else None
+                raw += one_micro(views, sl(tokens), sl(labels), sl(enc))
+            raw = raw / n_micro
+        return raw / denom, raw
+
+    return loss_fn
+
+
+def make_train_step_fn(cfg: ModelConfig, plan: ShardingPlan,
+                       policy: CommPolicy, opt_cfg: OptimConfig,
+                       multi_pod: bool, n_micro: int = 1):
+    """The per-rank train step to run under shard_map."""
+    rep_mask = None  # built lazily (needs specs only)
+    loss_fn = make_loss_fn(cfg, plan, policy, multi_pod, n_micro)
+    pod_cfg = dataclasses.replace(policy.grad, scheme="two_step") \
+        if policy.grad.enabled else policy.grad
+
+    def step(store, opt_state, batch):
+        (seed_loss, raw), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(store, batch)
+
+        # --- model-axis sync for TP-replicated copies (exact psum) ---
+        mask = _replicated_mask(cfg, plan)
+        grads = {g: {n: (lax.psum(gr, "model") if mask[g][n] else gr)
+                     for n, gr in gg.items()}
+                 for g, gg in grads.items()}
+
+        # --- cross-pod sync: the paper's quantized two-step AR on the
+        #     already-RS'd flat shards (hierarchical scheme, realized) ---
+        if multi_pod:
+            grads = jax.tree_util.tree_map(
+                lambda gr: compressed_psum(gr, ("pod",), pod_cfg), grads)
+
+        sq = global_grad_norm(grads)
+        sq = lax.psum(lax.psum(sq, "data"), "model")
+        if multi_pod:
+            sq = lax.psum(sq, "pod")
+        gnorm = jnp.sqrt(sq)
+
+        new_store, new_opt, lr = adamw_update(store, grads, opt_state,
+                                              opt_cfg, gnorm)
+        loss_rep = lax.pmean(raw, "data")
+        if multi_pod:
+            loss_rep = lax.pmean(loss_rep, "pod")
+        metrics = {"loss": loss_rep, "grad_norm": gnorm, "lr": lr}
+        return new_store, new_opt, metrics
+
+    return step
+
+
+def make_train_step(cfg: ModelConfig, plan: ShardingPlan,
+                    policy: CommPolicy, opt_cfg: OptimConfig, mesh,
+                    global_batch: int, n_micro: int = 1):
+    """jit(shard_map(step)) over the production mesh."""
+    multi_pod = "pod" in mesh.axis_names
+    step = make_train_step_fn(cfg, plan, policy, opt_cfg, multi_pod,
+                              n_micro)
+    bspec = batch_spec(global_batch, mesh)
+    store_spec = jax.tree_util.tree_map(lambda _: STORE_SPEC,
+                                        param_groups(cfg, plan))
+    bs = {"tokens": bspec, "labels": bspec}
+    if cfg.is_enc_dec or cfg.has_cross:
+        bs["enc_embeds"] = bspec
+    metric_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
+    opt_spec = {"m": STORE_SPEC, "v": STORE_SPEC, "step": P()}
+
+    sm = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(STORE_SPEC, opt_spec, bs),
+        out_specs=(STORE_SPEC, opt_spec, metric_spec),
+        check_vma=False)
+    return jax.jit(sm, donate_argnums=(0, 1))
+
+
+def init_train_state(store, opt_cfg: OptimConfig):
+    return init_opt_state(store, opt_cfg)

@@ -1,0 +1,44 @@
+"""Multi-device integration tests (8 fake CPU devices, subprocess —
+XLA device count locks at first jax init, so each check gets its own
+process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "_multidev_script.py")
+
+
+def _run(check):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    r = subprocess.run([sys.executable, SCRIPT, check],
+                       capture_output=True, text=True, env=env,
+                       timeout=2400)
+    assert r.returncode == 0, \
+        f"{check} failed:\nstdout:{r.stdout[-2000:]}\nstderr:{r.stderr[-3000:]}"
+    assert "ok" in r.stdout
+
+
+def test_quantized_allreduce_all_schemes():
+    _run("quantized_ar")
+
+
+def test_quantized_a2a_semantics():
+    _run("a2a")
+
+
+def test_train_step_multiaxis_two_policies():
+    _run("train_two_policies")
+
+
+@pytest.mark.slow
+def test_tp_fsdp_equivalence_vs_single_device():
+    _run("tp_equivalence")
+
+
+def test_ep_token_slicing_exact():
+    _run("ep_slice")

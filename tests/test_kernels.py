@@ -1,0 +1,78 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit-exact."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (fused_dequant_unpack, fused_quant_pack,
+                           fused_spike_pack)
+from repro.kernels import ref
+from repro.kernels.dequant_unpack import dequant_unpack
+from repro.kernels.quant_pack import quant_pack
+from repro.kernels.spike_reserve import spike_pack
+
+SWEEP = [(8, 128), (6, 128), (5, 128), (4, 32), (3, 32), (2, 32), (7, 128)]
+
+
+def _rand(rows, n, dtype, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, n), jnp.float32)
+    return (x * 3).astype(dtype)
+
+
+@pytest.mark.parametrize("bits,group", SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows,n", [(8, 4096), (16, 1024), (8, 256)])
+def test_quant_pack_matches_ref(bits, group, dtype, rows, n):
+    if n % group:
+        pytest.skip("n not multiple of group")
+    x = _rand(rows, n, dtype, seed=bits)
+    p, s, z = quant_pack(x, bits=bits, group=group, interpret=True)
+    pr, sr, zr = ref.quant_pack_ref(x, bits, group)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(zr))
+
+    y = dequant_unpack(p, s, z, bits=bits, group=group, n=n,
+                       interpret=True)
+    yr = ref.dequant_unpack_ref(pr, sr, zr, bits, group, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=0)
+
+
+@pytest.mark.parametrize("bits,group", [(2, 32), (3, 32), (4, 32)])
+def test_spike_kernel_matches_ref(bits, group):
+    x = _rand(8, 4096, jnp.float32, seed=bits + 100)
+    outs = spike_pack(x, bits=bits, group=group, interpret=True)
+    refs = ref.spike_pack_ref(x, bits, group)
+    names = ["payload", "scale", "zero", "spike_vals", "spike_idx"]
+    for a, b, name in zip(outs, refs, names):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"{name} mismatch")
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([2, 3, 4, 5, 6, 8]),
+       rows=st.sampled_from([8, 24]),
+       seed=st.integers(0, 2 ** 20))
+def test_kernel_property_sweep(bits, rows, seed):
+    group = 128 if bits >= 5 else 32
+    x = _rand(rows, 512, jnp.float32, seed=seed)
+    p, s, z = quant_pack(x, bits=bits, group=group, interpret=True)
+    pr, sr, zr = ref.quant_pack_ref(x, bits, group)
+    assert np.array_equal(np.asarray(p), np.asarray(pr))
+
+
+def test_ops_wrappers_pad_rows():
+    """ops.py pads odd row counts to ROW_BLOCK transparently."""
+    x = _rand(5, 256, jnp.float32)
+    p, s, z = fused_quant_pack(x, 4, 32, use_pallas=True)
+    pr, sr, zr = ref.quant_pack_ref(x, 4, 32)
+    assert p.shape[0] == 5
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    y = fused_dequant_unpack(p, s, z, 4, 32, 256, use_pallas=True)
+    yr = ref.dequant_unpack_ref(pr, sr, zr, 4, 32, 256)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=0)
+    outs = fused_spike_pack(x, 2, 32, use_pallas=True)
+    refs = ref.spike_pack_ref(x, 2, 32)
+    for a, b in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
