@@ -1,8 +1,10 @@
-"""Kernel microbenchmarks: fused QDQ+pack throughput (CPU wall numbers
-are for relative comparison only; the Pallas path targets TPU VMEM).
+"""Kernel microbenchmarks: wire-codec backend comparison (CPU wall numbers
+are for relative comparison only; the Pallas path targets TPU VMEM and
+runs in interpret mode here).
 
-Also reports the wire-volume reduction each bit width buys — the
-quantity the paper's bandwidth gains are made of.
+Reports encode+decode throughput for BOTH codec backends ("ref" pure jnp
+vs "pallas" fused) across bit widths, plus the wire-volume reduction each
+width buys — the quantity the paper's bandwidth gains are made of.
 """
 from __future__ import annotations
 
@@ -17,10 +19,42 @@ from repro.core.comm_config import default_comm_config
 from repro.kernels import ref
 from repro.kernels.quant_pack import quant_pack
 
+ROWS, N = 64, 4096
+
+
+def _codec_rows(bits: int, fast: bool) -> List[Dict]:
+    """Encode/decode wall time + throughput for each backend."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (ROWS, N), jnp.float32)
+    in_bytes = ROWS * N * 4
+    rows = []
+    for backend in ("ref", "pallas"):
+        cfg = default_comm_config(bits, backend=backend)
+        wire = ROWS * cfg.wire_bytes(N)
+        enc = jax.jit(lambda t, c=cfg: codec.encode(t, c))
+        dec = jax.jit(lambda b, c=cfg: codec.decode(b, c, N))
+        buf = enc(x)
+        reps, warm = (2, 1) if fast else (5, 2)
+        us_e = timeit(enc, x, reps=reps, warmup=warm)
+        us_d = timeit(dec, buf, reps=reps, warmup=warm)
+        rows.append({
+            "key": f"kernel,codec_encode,int{bits},{backend}",
+            "value": round(us_e, 1), "unit": "us",
+            "gbps_in": round(in_bytes / us_e * 1e6 / 1e9, 2),
+            "wire_bytes": wire,
+            "wire_ratio_vs_bf16": round(cfg.compression_ratio(N), 2),
+        })
+        rows.append({
+            "key": f"kernel,codec_decode,int{bits},{backend}",
+            "value": round(us_d, 1), "unit": "us",
+            "gbps_out": round(in_bytes / us_d * 1e6 / 1e9, 2),
+        })
+    return rows
+
 
 def bench_kernels(fast: bool = False) -> List[Dict]:
     rows = []
-    x = jax.random.normal(jax.random.PRNGKey(0), (64, 4096), jnp.float32)
+    # fused quantize+pack kernel vs its jnp oracle (payload only)
+    x = jax.random.normal(jax.random.PRNGKey(0), (ROWS, N), jnp.float32)
     for bits in ([8, 4, 2] if fast else [8, 6, 5, 4, 3, 2]):
         group = 128 if bits >= 5 else 32
         k = jax.jit(lambda t: quant_pack(t, bits=bits, group=group,
@@ -33,13 +67,9 @@ def bench_kernels(fast: bool = False) -> List[Dict]:
             "key": f"kernel,quant_pack,int{bits}",
             "value": round(us_k, 1), "unit": "us(interpret)",
             "ref_us": round(us_r, 1),
-            "wire_ratio_vs_bf16": round(cfg.compression_ratio(4096), 2),
+            "wire_ratio_vs_bf16": round(cfg.compression_ratio(N), 2),
         })
-    # end-to-end wire codec throughput (the jnp path the collectives use)
-    for bits in (8, 2):
-        cfg = default_comm_config(bits)
-        enc = jax.jit(lambda t: codec.encode(t, cfg))
-        us = timeit(enc, x, reps=3, warmup=1)
-        rows.append({"key": f"kernel,codec_encode,int{bits}",
-                     "value": round(us, 1), "unit": "us"})
+    # end-to-end wire codec: backend comparison across the paper's widths
+    for bits in ([8, 2] if fast else [8, 6, 4, 2]):
+        rows.extend(_codec_rows(bits, fast))
     return rows

@@ -1,0 +1,43 @@
+"""jax version compatibility shims.
+
+The container pins jax 0.4.37, where ``shard_map`` still lives in
+``jax.experimental.shard_map`` and its replication check is spelled
+``check_rep``; newer jax exposes ``jax.shard_map(..., check_vma=...)``.
+Code in this repo is written against the new spelling and routed through
+this module so it runs on both.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+try:  # jax >= 0.6 style
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # pinned 0.4.x container
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+try:  # jax >= 0.4.38
+    axis_size = jax.lax.axis_size
+except AttributeError:
+    def axis_size(axis_name):
+        """Static size of a named mesh axis (inside shard_map)."""
+        frame = jax.core.axis_frame(axis_name)
+        return int(getattr(frame, "size", frame))
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` with the new-style signature on any jax version.
+
+    Usable both directly (``shard_map(f, mesh=..., ...)``) and as a
+    ``functools.partial`` decorator with ``f`` supplied later.
+    """
+    kwargs = {_CHECK_KW: check_vma}
+    if f is None:
+        return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)

@@ -2,13 +2,16 @@
 
 Public API:
   CommConfig / default_comm_config     per-site compression knobs
-  codec.encode / codec.decode          wire format (bit splitting + meta)
+                                       (incl. the codec backend:
+                                       "ref" | "pallas" | "auto")
+  codec.encode / codec.decode          wire format (bit splitting + meta),
+                                       dispatched over the backends
   compressed_psum                      quantized TP/DP AllReduce
   dispatch_all_to_all                  quantized MoE dispatch A2A
   hierarchical_all_reduce (+pipelined) slow-bridge schemes
 """
 from repro.core.comm_config import (  # noqa: F401
-    BIT_UNITS, CommConfig, NO_COMPRESSION, default_comm_config)
+    BACKENDS, BIT_UNITS, CommConfig, NO_COMPRESSION, default_comm_config)
 from repro.core import bitsplit, codec, quant, scale_codec, spike  # noqa: F401
 from repro.core.collectives import (  # noqa: F401
     compressed_psum, dispatch_all_to_all, grad_all_reduce,

@@ -11,9 +11,18 @@ Fig. 5c (metadata section with scales/zeros and reserved spikes). With
 ``scale_int`` the scales/zeros (and spike values) are integer-log encoded
 (Eq. 1) so each costs 1 byte instead of a BF16's 2 (Table 4).
 
-Everything here is pure jnp: jit-, vmap-, and shard_map-safe, with static
-shapes derived from ``CommConfig`` so the collectives can pre-compute the
-exact wire size. The Pallas fused fast path lives in ``repro.kernels``.
+``encode``/``decode`` dispatch over two interchangeable backends that
+produce **bit-identical** wire buffers (tests/test_backend_equality.py):
+
+* ``"ref"``    — pure jnp; jit-, vmap-, and shard_map-safe, with static
+  shapes derived from ``CommConfig`` so the collectives can pre-compute
+  the exact wire size.
+* ``"pallas"`` — the fused kernels in :mod:`repro.kernels.wire`: one VMEM
+  pass per tile emits/consumes the complete wire buffer (interpret mode
+  off-TPU, compiled on TPU).
+* ``"auto"``   — pallas on TPU, ref elsewhere (the default).
+
+The backend is selected per communication site via ``CommConfig.backend``.
 """
 from __future__ import annotations
 
@@ -26,6 +35,14 @@ from repro.core import bitsplit, scale_codec
 from repro.core.comm_config import CommConfig
 from repro.core.quant import quantize, dequantize
 from repro.core.spike import SpikeQuant, spike_quantize, spike_dequantize
+
+
+def resolve_backend(cfg: CommConfig) -> str:
+    """Map cfg.backend to a concrete backend ("ref" | "pallas")."""
+    backend = getattr(cfg, "backend", "auto")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
 
 
 def _to_bytes(x: jnp.ndarray) -> jnp.ndarray:
@@ -52,6 +69,49 @@ def _from_bytes(buf: jnp.ndarray, dtype, inner: int) -> jnp.ndarray:
 def encode(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
     """(..., n) float -> (..., cfg.wire_bytes(n)) uint8."""
     assert cfg.enabled
+    if resolve_backend(cfg) == "pallas":
+        return encode_pallas(x, cfg)
+    return encode_ref(x, cfg)
+
+
+def decode(buf: jnp.ndarray, cfg: CommConfig, n: int,
+           out_dtype=jnp.float32) -> jnp.ndarray:
+    """(..., wire_bytes(n)) uint8 -> (..., n) out_dtype."""
+    assert cfg.enabled
+    if resolve_backend(cfg) == "pallas":
+        return decode_pallas(buf, cfg, n, out_dtype)
+    return decode_ref(buf, cfg, n, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas backend: fused single-pass kernels (repro.kernels.wire)
+# ---------------------------------------------------------------------------
+
+def encode_pallas(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
+    """Fused-kernel encode; wire bytes identical to :func:`encode_ref`."""
+    from repro.kernels import ops  # deferred: keeps core import-light
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    buf = ops.fused_encode_wire(x.reshape(-1, n), cfg, use_pallas=True)
+    return buf.reshape(*lead, cfg.wire_bytes(n))
+
+
+def decode_pallas(buf: jnp.ndarray, cfg: CommConfig, n: int,
+                  out_dtype=jnp.float32) -> jnp.ndarray:
+    """Fused-kernel decode; inverse of :func:`encode_pallas`."""
+    from repro.kernels import ops
+    lead = buf.shape[:-1]
+    out = ops.fused_decode_wire(buf.reshape(-1, buf.shape[-1]), cfg, n,
+                                out_dtype, use_pallas=True)
+    return out.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# ref backend: pure jnp
+# ---------------------------------------------------------------------------
+
+def encode_ref(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
+    """(..., n) float -> (..., cfg.wire_bytes(n)) uint8 (pure jnp)."""
     n = x.shape[-1]
     meta_dtype = jnp.dtype(cfg.meta_dtype)
 
@@ -89,10 +149,9 @@ def encode(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
     return buf
 
 
-def decode(buf: jnp.ndarray, cfg: CommConfig, n: int,
-           out_dtype=jnp.float32) -> jnp.ndarray:
-    """(..., wire_bytes(n)) uint8 -> (..., n) out_dtype."""
-    assert cfg.enabled
+def decode_ref(buf: jnp.ndarray, cfg: CommConfig, n: int,
+               out_dtype=jnp.float32) -> jnp.ndarray:
+    """(..., wire_bytes(n)) uint8 -> (..., n) out_dtype (pure jnp)."""
     meta_dtype = jnp.dtype(cfg.meta_dtype)
     groups = n // cfg.group
     lead = buf.shape[:-1]

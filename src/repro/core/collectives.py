@@ -2,7 +2,10 @@
 
 All functions are written for use INSIDE :func:`jax.shard_map` and take
 mesh axis names. The wire that crosses the link is the packed uint8 buffer
-from :mod:`repro.core.codec`; everything else (chunking, local reduction,
+from :mod:`repro.core.codec` — produced by whichever codec backend
+``cfg.backend`` selects (pure jnp ``"ref"``, fused Pallas ``"pallas"``, or
+``"auto"``), so every collective here transparently rides the fused
+kernels when they are enabled; everything else (chunking, local reduction,
 scatter/gather choreography) is the Flash Communication two-step and its
 hierarchical / pipelined variants mapped onto ``jax.lax`` collectives:
 
@@ -38,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.core import codec
 from repro.core.comm_config import CommConfig
 
@@ -64,7 +68,7 @@ def padded_len(n: int, mult: int) -> int:
 # --------------------------------------------------------------------------
 
 def _gsize(axis, groups):
-    return len(groups[0]) if groups is not None else lax.axis_size(axis)
+    return len(groups[0]) if groups is not None else compat.axis_size(axis)
 
 
 def quantized_all_reduce(x: jnp.ndarray, axis: str,
@@ -94,7 +98,7 @@ def quantized_all_reduce(x: jnp.ndarray, axis: str,
 def quantized_reduce_scatter(x: jnp.ndarray, axis: str,
                              cfg: CommConfig) -> jnp.ndarray:
     """Quantized RS: (n,) -> (n/tp,) summed chunk (phase 1 of two-step)."""
-    tp = lax.axis_size(axis)
+    tp = compat.axis_size(axis)
     n = x.shape[-1]
     assert n % tp == 0 and (n // tp) % cfg.group == 0
     xc = x.reshape(tp, n // tp)
@@ -153,11 +157,11 @@ def hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str, outer_axis: str,
     fast hop (beyond-paper knob; defaults to ``cfg``).
     """
     outer_cfg = outer_cfg or cfg
-    inner = lax.axis_size(inner_axis)
+    inner = compat.axis_size(inner_axis)
     n = x.shape[-1]
     assert n % inner == 0 and (n // inner) % cfg.group == 0
     chunk = quantized_reduce_scatter(x, inner_axis, cfg)     # (n/inner,)
-    outer = lax.axis_size(outer_axis)
+    outer = compat.axis_size(outer_axis)
     if outer > 1:
         if (n // inner) % (outer * outer_cfg.group) == 0:
             chunk = quantized_all_reduce(chunk, outer_axis, outer_cfg)
@@ -184,7 +188,7 @@ def pipelined_hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str,
     Semantically identical to the serial version.
     """
     chunks = max(1, cfg.pipeline_chunks)
-    inner = lax.axis_size(inner_axis)
+    inner = compat.axis_size(inner_axis)
     n = x.shape[-1]
     mult = inner * cfg.group * chunks
     assert n % mult == 0, (n, mult)
@@ -248,7 +252,7 @@ def compressed_psum(x: jnp.ndarray, axes: tuple, cfg: CommConfig,
         for s in x.shape:
             n *= s
         return out[:n].reshape(x.shape).astype(x.dtype)
-    sizes = [lax.axis_size(a) for a in axes]
+    sizes = [compat.axis_size(a) for a in axes]
     chunks = cfg.pipeline_chunks if cfg.scheme == "hier_pp" else 1
     mult = sizes[0] * cfg.group * chunks
     for s in sizes[1:]:
@@ -306,7 +310,7 @@ def grad_all_reduce(grads, axes: Sequence[str], cfg: CommConfig,
     """
     denom = 1
     for a in axes:
-        denom *= lax.axis_size(a)
+        denom *= compat.axis_size(a)
 
     def one(g):
         out = compressed_psum(g, tuple(axes), cfg)

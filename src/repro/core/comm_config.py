@@ -28,6 +28,10 @@ BIT_UNITS = {
 
 SCHEMES = ("nccl", "two_step", "hierarchical", "hier_pp")
 
+# Wire-codec backends: "ref" is the pure-jnp path, "pallas" the fused
+# kernel path (interpret mode off-TPU), "auto" picks pallas on TPU.
+BACKENDS = ("ref", "pallas", "auto")
+
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
@@ -43,15 +47,23 @@ class CommConfig:
     pipeline_chunks: int = 4      # microchunks for hier_pp
     # Meta dtype on the wire when scale_int is off (paper: BF16).
     meta_dtype: str = "bfloat16"
+    # Which codec implementation produces/consumes the wire buffer.
+    backend: str = "auto"
 
     def __post_init__(self):
         if self.enabled:
             assert self.bits in BIT_UNITS, f"unsupported bits={self.bits}"
             assert self.group > 2, "group must hold at least 3 values"
             assert self.scheme in SCHEMES, f"unknown scheme {self.scheme}"
+            assert self.backend in BACKENDS, \
+                f"unknown backend {self.backend}"
             if self.spike:
                 # 2 spikes per group are removed; need codes for the rest.
                 assert self.group >= 4
+
+    def with_backend(self, backend: str) -> "CommConfig":
+        """Same config routed through a different codec backend."""
+        return dataclasses.replace(self, backend=backend)
 
     # ----- wire-size accounting (exact; used by Table 4/5 benches too) ---
 
@@ -90,12 +102,14 @@ class CommConfig:
 # "where INT2 is enabled with spike reserving". INT3_SR exists as an
 # explicit option (Tables 3/7) but is not the default.
 def default_comm_config(bits: int, scheme: str = "two_step",
-                        scale_int: bool = False) -> CommConfig:
+                        scale_int: bool = False,
+                        backend: str = "auto") -> CommConfig:
     if bits >= 5:
         return CommConfig(bits=bits, group=128, spike=False,
-                          scale_int=scale_int, scheme=scheme)
+                          scale_int=scale_int, scheme=scheme,
+                          backend=backend)
     return CommConfig(bits=bits, group=32, spike=bits <= 2,
-                      scale_int=scale_int, scheme=scheme)
+                      scale_int=scale_int, scheme=scheme, backend=backend)
 
 
 NO_COMPRESSION = CommConfig(enabled=False, scheme="nccl")

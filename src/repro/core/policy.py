@@ -40,14 +40,36 @@ class CommPolicy:
 
 BF16_POLICY = CommPolicy()
 
+
+def with_backend(policy: CommPolicy, backend: str) -> CommPolicy:
+    """Route every enabled site of a policy through one codec backend.
+
+    ``backend`` is ``"ref" | "pallas" | "auto"`` (see
+    :data:`repro.core.comm_config.BACKENDS`); disabled sites are left
+    untouched. This is how launch/serving paths flip the whole policy
+    onto the fused Pallas wire codec at once.
+    """
+    def _site(cfg: Optional[CommConfig]) -> Optional[CommConfig]:
+        if cfg is None or not cfg.enabled:
+            return cfg
+        return cfg.with_backend(backend)
+
+    return dataclasses.replace(
+        policy,
+        tp=_site(policy.tp), a2a=_site(policy.a2a), grad=_site(policy.grad),
+        qag=_site(policy.qag), qgrad_rs=_site(policy.qgrad_rs),
+        tp_bwd=_site(policy.tp_bwd))
+
+
 # The paper's shipping configuration: INT8 g128 TP AllReduce, INT4 g32
 # MoE dispatch, hierarchical INT8 gradient sync across the slow bridge.
 def paper_policy(tp_bits: int = 8, a2a_bits: int = 4,
-                 grad_bits: int = 8) -> CommPolicy:
+                 grad_bits: int = 8, backend: str = "auto") -> CommPolicy:
     return CommPolicy(
-        tp=default_comm_config(tp_bits),
-        a2a=default_comm_config(a2a_bits),
-        grad=default_comm_config(grad_bits, scheme="hierarchical"),
+        tp=default_comm_config(tp_bits, backend=backend),
+        a2a=default_comm_config(a2a_bits, backend=backend),
+        grad=default_comm_config(grad_bits, scheme="hierarchical",
+                                 backend=backend),
         qag=None,
     )
 
@@ -56,27 +78,27 @@ def paper_policy(tp_bits: int = 8, a2a_bits: int = 4,
 # wire everywhere it wins — ZeRO++-style INT8 weight gather, INT8
 # backward cotangent AR, EP token slicing — with paper-faithful widths
 # at the accuracy-sensitive sites.
-def optimized_policy() -> CommPolicy:
+def optimized_policy(backend: str = "auto") -> CommPolicy:
     return CommPolicy(
-        tp=default_comm_config(8),
-        a2a=default_comm_config(4),
-        grad=default_comm_config(8, scheme="hierarchical"),
-        qag=default_comm_config(8),
-        tp_bwd=default_comm_config(8),
+        tp=default_comm_config(8, backend=backend),
+        a2a=default_comm_config(4, backend=backend),
+        grad=default_comm_config(8, scheme="hierarchical", backend=backend),
+        qag=default_comm_config(8, backend=backend),
+        tp_bwd=default_comm_config(8, backend=backend),
         ep_slice=True,
     )
 
 
 # Beyond-paper: everything compressed as hard as accuracy allows, incl.
 # scale_int metadata and pipelined hierarchical gradient sync.
-def aggressive_policy() -> CommPolicy:
+def aggressive_policy(backend: str = "auto") -> CommPolicy:
     return CommPolicy(
-        tp=default_comm_config(5, scale_int=True),
-        a2a=default_comm_config(4, scale_int=True),
+        tp=default_comm_config(5, scale_int=True, backend=backend),
+        a2a=default_comm_config(4, scale_int=True, backend=backend),
         grad=CommConfig(bits=4, group=32, spike=True, scale_int=True,
-                        scheme="hier_pp"),
-        qag=default_comm_config(4, scale_int=True),
-        qgrad_rs=default_comm_config(8),
-        tp_bwd=default_comm_config(8),
+                        scheme="hier_pp", backend=backend),
+        qag=default_comm_config(4, scale_int=True, backend=backend),
+        qgrad_rs=default_comm_config(8, backend=backend),
+        tp_bwd=default_comm_config(8, backend=backend),
         ep_slice=True,
     )

@@ -5,4 +5,5 @@ so only wire bytes touch the link. These kernels are the TPU analogue —
 validated in interpret mode on CPU, targeted at VMEM tiles on TPU.
 """
 from repro.kernels.ops import (  # noqa: F401
-    fused_dequant_unpack, fused_quant_pack, fused_spike_pack)
+    fused_decode_wire, fused_dequant_unpack, fused_encode_wire,
+    fused_quant_pack, fused_spike_pack)

@@ -14,6 +14,7 @@ from repro.kernels import ref
 from repro.kernels.dequant_unpack import dequant_unpack
 from repro.kernels.quant_pack import ROW_BLOCK, quant_pack
 from repro.kernels.spike_reserve import spike_pack
+from repro.kernels.wire import decode_wire, encode_wire
 
 
 def _backend() -> str:
@@ -69,3 +70,44 @@ def fused_spike_pack(x: jnp.ndarray, bits: int, group: int,
     outs = spike_pack(xp, bits=bits, group=group,
                       interpret=_backend() != "tpu")
     return tuple(o[:rows] for o in outs)
+
+
+# --------------------------------------------------------------------------
+# complete wire format (the codec's pallas backend)
+# --------------------------------------------------------------------------
+
+def fused_encode_wire(x: jnp.ndarray, cfg, use_pallas: bool | None = None):
+    """(R, n) float -> (R, cfg.wire_bytes(n)) uint8 full wire buffer.
+
+    The fused analogue of ``repro.core.codec.encode`` for 2-D inputs:
+    payload, scale/zero (optionally Eq.-1 log-encoded) and the spike
+    sections are assembled in one kernel pass.
+    """
+    if use_pallas is None:
+        use_pallas = _backend() == "tpu"
+    if not use_pallas:
+        from repro.core import codec
+        return codec.encode_ref(x, cfg)
+    xp, rows = _pad_rows(x)
+    buf = encode_wire(xp, bits=cfg.bits, group=cfg.group, spike=cfg.spike,
+                      scale_int=cfg.scale_int, theta=cfg.theta,
+                      meta_dtype=cfg.meta_dtype,
+                      interpret=_backend() != "tpu")
+    return buf[:rows]
+
+
+def fused_decode_wire(buf: jnp.ndarray, cfg, n: int,
+                      out_dtype=jnp.float32,
+                      use_pallas: bool | None = None):
+    """(R, cfg.wire_bytes(n)) uint8 -> (R, n) out_dtype."""
+    if use_pallas is None:
+        use_pallas = _backend() == "tpu"
+    if not use_pallas:
+        from repro.core import codec
+        return codec.decode_ref(buf, cfg, n, out_dtype)
+    bp, rows = _pad_rows(buf)
+    out = decode_wire(bp, bits=cfg.bits, group=cfg.group, n=n,
+                      spike=cfg.spike, scale_int=cfg.scale_int,
+                      theta=cfg.theta, meta_dtype=cfg.meta_dtype,
+                      out_dtype=out_dtype, interpret=_backend() != "tpu")
+    return out[:rows]

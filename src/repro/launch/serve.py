@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core.policy import BF16_POLICY, aggressive_policy, paper_policy
+from repro.core.policy import (BF16_POLICY, aggressive_policy,
+                               paper_policy, with_backend)
 from repro.launch.mesh import make_test_mesh
 from repro.models.model import param_groups
 from repro.parallel.plan import make_plan
@@ -36,13 +37,16 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mesh", default="1,1")
     ap.add_argument("--policy", default="paper", choices=list(POLICIES))
+    ap.add_argument("--codec-backend", default="auto",
+                    choices=("auto", "ref", "pallas"),
+                    help="wire codec backend for every comm site")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     data_n, model_n = (int(x) for x in args.mesh.split(","))
     mesh = make_test_mesh(data=data_n, model=model_n)
     plan = make_plan(cfg, tp=model_n, fsdp=data_n)
-    policy = POLICIES[args.policy]()
+    policy = with_backend(POLICIES[args.policy](), args.codec_backend)
     cache_len = args.prompt_len + args.gen
 
     store = build_store(param_groups(cfg, plan), plan,

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core.policy import BF16_POLICY, aggressive_policy, paper_policy
+from repro.core.policy import (BF16_POLICY, aggressive_policy,
+                               paper_policy, with_backend)
 from repro.launch.mesh import make_test_mesh
 from repro.models.model import param_groups
 from repro.parallel.plan import make_plan
@@ -45,6 +46,9 @@ def main(argv=None):
     ap.add_argument("--mesh", default="1,1",
                     help="data,model sizes (devices must exist)")
     ap.add_argument("--policy", default="paper", choices=list(POLICIES))
+    ap.add_argument("--codec-backend", default="auto",
+                    choices=("auto", "ref", "pallas"),
+                    help="wire codec backend for every comm site")
     ap.add_argument("--n-micro", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", default=None)
@@ -55,7 +59,7 @@ def main(argv=None):
     data_n, model_n = (int(x) for x in args.mesh.split(","))
     mesh = make_test_mesh(data=data_n, model=model_n)
     plan = make_plan(cfg, tp=model_n, fsdp=data_n)
-    policy = POLICIES[args.policy]()
+    policy = with_backend(POLICIES[args.policy](), args.codec_backend)
     opt_cfg = OptimConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
                           total_steps=args.steps)
 

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import codec
 from repro.core.comm_config import CommConfig
 from repro.parallel.plan import ShardingPlan, flat_store_len
@@ -147,7 +148,7 @@ def _ag_bwd(axis, cfg, bwd_cfg, res, g):
     if bwd_cfg is not None and bwd_cfg.enabled:
         from repro.core.collectives import quantized_reduce_scatter
         n = g.shape[-1]
-        if n % (lax.axis_size(axis) * bwd_cfg.group) == 0:
+        if n % (compat.axis_size(axis) * bwd_cfg.group) == 0:
             return (quantized_reduce_scatter(
                 g.astype(jnp.float32), axis, bwd_cfg).astype(g.dtype),)
     return (lax.psum_scatter(g, axis, scatter_dimension=0, tiled=True),)

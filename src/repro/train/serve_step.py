@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.policy import CommPolicy
 from repro.models.config import ModelConfig
 from repro.models.model import (forward, greedy_next_token, init_caches,
@@ -42,7 +43,7 @@ def make_prefill(cfg: ModelConfig, plan: ShardingPlan, policy: CommPolicy,
     bs = {"tokens": bspec}
     if cfg.is_enc_dec or cfg.has_cross:
         bs["enc_embeds"] = bspec
-    sm = jax.shard_map(prefill, mesh=mesh,
+    sm = compat.shard_map(prefill, mesh=mesh,
                        in_specs=(store_spec(plan), bs),
                        out_specs=bspec, check_vma=False)
     return jax.jit(sm)
@@ -144,7 +145,7 @@ def make_decode_step(cfg: ModelConfig, plan: ShardingPlan,
     bs = {"tokens": bspec}
     if cfg.is_enc_dec or cfg.has_cross:
         bs["enc_embeds"] = bspec
-    sm = jax.shard_map(step, mesh=mesh,
+    sm = compat.shard_map(step, mesh=mesh,
                        in_specs=(store_spec(plan), cache_specs, bs),
                        out_specs=(bspec, cache_specs), check_vma=False)
     return jax.jit(sm, donate_argnums=(1,))
@@ -161,6 +162,6 @@ def make_cache_init(cfg: ModelConfig, plan: ShardingPlan, mesh,
     def init():
         return init_caches(cfg, plan, b_loc, cache_len, dtype)
 
-    sm = jax.shard_map(init, mesh=mesh, in_specs=(),
+    sm = compat.shard_map(init, mesh=mesh, in_specs=(),
                        out_specs=cache_specs, check_vma=False)
     return jax.jit(sm)

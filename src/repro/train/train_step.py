@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.collectives import compressed_psum
 from repro.core.comm_config import CommConfig
 from repro.core.policy import CommPolicy
@@ -70,9 +71,9 @@ def make_loss_fn(cfg: ModelConfig, plan: ShardingPlan, policy: CommPolicy,
         return lm_loss(hidden, unemb, labels, cfg, plan, aux, aux_weight)
 
     def loss_fn(views, batch):
-        denom = lax.axis_size("model") * lax.axis_size("data")
+        denom = compat.axis_size("model") * compat.axis_size("data")
         if multi_pod:
-            denom *= lax.axis_size("pod")
+            denom *= compat.axis_size("pod")
         tokens, labels = batch["tokens"], batch["labels"]
         enc = batch.get("enc_embeds")
         if n_micro == 1:
@@ -150,7 +151,7 @@ def make_train_step(cfg: ModelConfig, plan: ShardingPlan,
     metric_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
     opt_spec = {"m": STORE_SPEC, "v": STORE_SPEC, "step": P()}
 
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         step, mesh=mesh,
         in_specs=(STORE_SPEC, opt_spec, bs),
         out_specs=(STORE_SPEC, opt_spec, metric_spec),

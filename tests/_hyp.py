@@ -1,0 +1,69 @@
+"""Hypothesis import guard with a deterministic fallback.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt) that may be
+missing from the runtime image. Importing it at module scope used to make
+``tests/test_codec.py`` / ``tests/test_kernels.py`` hard-error at
+*collection* time, taking the whole suite down. Test modules import
+``given``/``settings``/``st`` from here instead:
+
+* with hypothesis installed, this re-exports the real thing;
+* without it, a tiny deterministic stand-in runs each ``@given`` test over
+  a fixed pseudo-random sample of the declared strategies (seeded by the
+  test name), covering the same subset of the API the tests use
+  (``sampled_from``, ``integers``, ``booleans``). No shrinking, no
+  database — but the properties still execute instead of skipping.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _FALLBACK_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rng -> drawn value
+
+    class st:  # noqa: N801  (mimics `hypothesis.strategies` module name)
+        @staticmethod
+        def sampled_from(elements):
+            opts = list(elements)
+            return _Strategy(lambda rng: rng.choice(opts))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.choice([False, True]))
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    def given(**strategies):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(f, "_max_examples", _FALLBACK_EXAMPLES))
+                rng = random.Random(f.__qualname__)  # deterministic per test
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    f(*args, **drawn, **kwargs)
+            # Hide the strategy-drawn params from pytest's fixture
+            # resolution (functools.wraps would otherwise expose them).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco

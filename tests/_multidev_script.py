@@ -17,6 +17,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core import (compressed_psum, default_comm_config,  # noqa: E402
                         dispatch_all_to_all)
 from repro.core.codec import qdq_wire  # noqa: E402
@@ -31,7 +32,7 @@ def check_quantized_ar():
         for bits in (8, 5, 2):
             cfg = default_comm_config(bits, scheme=scheme)
 
-            @partial(jax.shard_map, mesh=mesh,
+            @partial(compat.shard_map, mesh=mesh,
                      in_specs=P(("pod", "data", "model")),
                      out_specs=P(("pod", "data", "model")),
                      check_vma=False)
@@ -56,7 +57,7 @@ def check_a2a_semantics():
     xa = jax.random.normal(jax.random.PRNGKey(2), (4, 4, 2, 128),
                            jnp.float32)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("model"),
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("model"),
              out_specs=P("model"), check_vma=False)
     def g(xs):
         return dispatch_all_to_all(xs[0], "model", cfg)[None]
@@ -209,7 +210,7 @@ def check_ep_slice():
     def run(ep_slice):
         pol = dataclasses.replace(BF16_POLICY, ep_slice=ep_slice)
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P(),) * 5,
+        @partial(compat.shard_map, mesh=mesh, in_specs=(P(),) * 5,
                  out_specs=P(), check_vma=False)
         def f_(W1g, W2g, W3g, Rg, xg):
             rank = lax.axis_index("model")

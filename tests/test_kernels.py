@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels import (fused_dequant_unpack, fused_quant_pack,
                            fused_spike_pack)
@@ -60,6 +60,43 @@ def test_kernel_property_sweep(bits, rows, seed):
     p, s, z = quant_pack(x, bits=bits, group=group, interpret=True)
     pr, sr, zr = ref.quant_pack_ref(x, bits, group)
     assert np.array_equal(np.asarray(p), np.asarray(pr))
+
+
+@pytest.mark.parametrize("bits,group", SWEEP)
+@pytest.mark.parametrize("spike,scale_int",
+                         [(False, False), (True, False),
+                          (False, True), (True, True)])
+def test_wire_kernel_matches_ref_codec(bits, group, spike, scale_int):
+    """The full-wire-format kernel == ref codec, byte for byte."""
+    from repro.core import codec
+    from repro.core.comm_config import CommConfig
+    from repro.kernels.wire import decode_wire, encode_wire
+    cfg = CommConfig(bits=bits, group=group, spike=spike,
+                     scale_int=scale_int)
+    x = _rand(8, 1024, jnp.float32, seed=bits + 10 * spike)
+    buf = encode_wire(x, bits=bits, group=group, spike=spike,
+                      scale_int=scale_int, theta=cfg.theta, interpret=True)
+    ref_buf = codec.encode_ref(x, cfg)
+    np.testing.assert_array_equal(np.asarray(buf), np.asarray(ref_buf))
+    y = decode_wire(buf, bits=bits, group=group, n=1024, spike=spike,
+                    scale_int=scale_int, theta=cfg.theta, interpret=True)
+    y_ref = jax.jit(lambda b: codec.decode_ref(b, cfg, 1024))(ref_buf)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_fused_wire_wrappers_pad_rows():
+    """ops.fused_{en,de}code_wire pad odd row counts transparently."""
+    from repro.core import codec
+    from repro.core.comm_config import default_comm_config
+    from repro.kernels.ops import fused_decode_wire, fused_encode_wire
+    cfg = default_comm_config(3)
+    x = _rand(5, 256, jnp.float32)
+    buf = fused_encode_wire(x, cfg, use_pallas=True)
+    assert buf.shape == (5, cfg.wire_bytes(256))
+    np.testing.assert_array_equal(np.asarray(buf),
+                                  np.asarray(codec.encode_ref(x, cfg)))
+    y = fused_decode_wire(buf, cfg, 256, use_pallas=True)
+    assert y.shape == (5, 256)
 
 
 def test_ops_wrappers_pad_rows():
