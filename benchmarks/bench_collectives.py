@@ -1,0 +1,103 @@
+"""Collective-level benchmark: the full AllReduce schedules, not just
+the codec.
+
+bench_kernels times encode/decode in isolation; this bench times the
+whole quantized AllReduce — chunk + QDQ + hop + reduce + hop — for every
+scheme (uncompressed ``nccl`` psum baseline, XLA ``two_step``, the fused
+Pallas ``fused`` path, and the ``hierarchical`` variants) on 8 fake CPU
+devices, plus the exact per-rank wire footprint each scheme puts on the
+link. CPU wall times are schedule-overhead proxies (no real ICI), but
+they make scheme regressions visible and give the fused path a tracked
+number; rows land in benchmarks/results/collectives.json like every
+other bench.
+
+XLA pins the device count at first jax init, so the measurement runs in
+a subprocess with ``--xla_force_host_platform_device_count=8`` (same
+pattern as tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import subprocess
+import sys
+
+SIZES = (1 << 16, 1 << 18)
+FAST_SIZES = (1 << 14,)
+BITS = (8, 4)
+
+
+def _worker(fast: bool):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from benchmarks.common import timeit
+    from repro import compat
+    from repro.core import compressed_psum, default_comm_config
+    from repro.launch.mesh import make_test_mesh
+
+    rows = []
+    sizes = FAST_SIZES if fast else SIZES
+    mesh = make_test_mesh(data=1, model=4, pod=2)
+    dev = 8
+
+    def bench_one(cfg, axes, n, label, bits):
+        @functools.partial(compat.shard_map, mesh=mesh,
+                           in_specs=P(("pod", "data", "model")),
+                           out_specs=P(("pod", "data", "model")),
+                           check_vma=False)
+        def f(xs):
+            return compressed_psum(xs[0], axes, cfg)[None]
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (dev, n), jnp.float32)
+        us = timeit(jax.jit(f), x, reps=5, warmup=2)
+        wire = (cfg.wire_bytes(n) if cfg.enabled and cfg.scheme != "nccl"
+                else 4 * n)
+        rows.append({"scheme": label, "bits": bits, "n": n,
+                     "wire_bytes_per_rank": wire,
+                     "value": round(us, 1), "unit": "us"})
+
+    for n in sizes:
+        baseline = default_comm_config(8, scheme="nccl")
+        bench_one(baseline, ("model", "pod"), n, "nccl", 32)
+        for bits in BITS:
+            for scheme in ("two_step", "fused", "hierarchical", "hier_pp"):
+                cfg = default_comm_config(bits, scheme=scheme)
+                bench_one(cfg, ("model", "pod"), n, scheme, bits)
+    print(json.dumps(rows))
+
+
+def run(fast: bool = False):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    cmd = [sys.executable, os.path.abspath(__file__), "--worker"]
+    if fast:
+        cmd.append("--fast")
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=900, cwd=root)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"collectives worker failed:\n{r.stdout[-2000:]}\n"
+            f"{r.stderr[-3000:]}")
+    # last stdout line is the JSON row dump
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def bench_collectives(fast: bool = False):
+    return run(fast)
+
+
+if __name__ == "__main__":
+    if "--worker" in sys.argv:
+        _worker("--fast" in sys.argv)
+    else:
+        from benchmarks.common import emit, save
+        rows = run("--fast" in sys.argv)
+        save("collectives", rows)
+        emit("collectives", rows)

@@ -14,6 +14,8 @@ Mapping to the paper:
   ttft          Fig 2      llama3-8b TTFT model
   pipeline      Fig 8      hierarchical pipeline schedule simulator
   kernels       setup sec  fused QDQ kernel micro-timings
+  collectives   Table 9+   full AllReduce schedules incl. scheme="fused"
+                           (8 fake CPU devices, subprocess)
   roofline      delv. (g)  three-term roofline from the dry-run sweep
 """
 from __future__ import annotations
@@ -37,6 +39,7 @@ def main(argv=None) -> int:
                                          bench_ttft, bench_volume)
     from benchmarks.bench_accuracy import (bench_scale_int,
                                            bench_sensitivity, bench_spike)
+    from benchmarks.bench_collectives import bench_collectives
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.bench_roofline import bench_roofline
 
@@ -51,6 +54,7 @@ def main(argv=None) -> int:
         "ttft": bench_ttft,
         "pipeline": bench_pipeline,
         "kernels": bench_kernels,
+        "collectives": bench_collectives,
         "roofline": bench_roofline,
     }
     failures = 0

@@ -1,0 +1,62 @@
+"""Regenerate the golden wire-format vectors (tests/golden/).
+
+    PYTHONPATH=src python scripts/gen_golden_wire.py
+
+Writes tests/golden/wire_vectors.npz: one fixed input tensor plus the
+reference-backend encoded buffer for every width 2-8 x spike on/off
+(paper-default group sizes, BF16 metadata). tests/test_wire_golden.py
+asserts byte-for-byte equality against these on every codec backend, so
+a codec refactor that changes the on-link bytes fails loudly instead of
+silently shifting the wire format.
+
+Only rerun this when the wire format is *deliberately* changed, and say
+so in the commit message.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import codec
+from repro.core.comm_config import CommConfig
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "tests", "golden", "wire_vectors.npz")
+
+ROWS, N = 4, 256
+SEED = 20250802
+
+
+def golden_cfg(bits: int, spike: bool) -> CommConfig:
+    """The pinned config per combo (paper-default group mapping)."""
+    return CommConfig(bits=bits, group=32 if bits <= 4 else 128,
+                      spike=spike, backend="ref")
+
+
+def golden_input() -> np.ndarray:
+    rng = np.random.default_rng(SEED)
+    # scale 3 + a few planted outliers so spike reserving has real spikes
+    x = (rng.standard_normal((ROWS, N)) * 3).astype(np.float32)
+    x[0, 7] = 40.0
+    x[1, 100] = -35.0
+    return x
+
+
+def main():
+    import jax.numpy as jnp
+    x = golden_input()
+    arrays = {"x": x}
+    for bits in range(2, 9):
+        for spike in (False, True):
+            cfg = golden_cfg(bits, spike)
+            buf = codec.encode(jnp.asarray(x), cfg)
+            arrays[f"int{bits}{'_sr' if spike else ''}"] = np.asarray(buf)
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    np.savez(OUT, **arrays)
+    total = sum(a.nbytes for a in arrays.values())
+    print(f"wrote {OUT}: {len(arrays) - 1} vectors, {total} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,23 @@ except AttributeError:
         return int(getattr(frame, "size", frame))
 
 
+def mesh_axis_names():
+    """All currently-bound mesh axis names, in mesh order, from inside
+    shard_map — or None when they cannot be determined on this jax.
+
+    Used by the fused RDMA AllReduce to build full MESH device
+    coordinates on multi-axis meshes without the caller having to thread
+    the mesh down through the collectives.
+    """
+    try:
+        from jax._src import core as _core
+        env = _core.get_axis_env()
+        names = tuple(env.axis_sizes.keys())
+        return names or None
+    except Exception:
+        return None
+
+
 def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True):
     """``jax.shard_map`` with the new-style signature on any jax version.
 

@@ -11,7 +11,8 @@ Public API:
   hierarchical_all_reduce (+pipelined) slow-bridge schemes
 """
 from repro.core.comm_config import (  # noqa: F401
-    BACKENDS, BIT_UNITS, CommConfig, NO_COMPRESSION, default_comm_config)
+    BACKENDS, BIT_UNITS, SCHEMES, CommConfig, NO_COMPRESSION,
+    default_comm_config)
 from repro.core import bitsplit, codec, quant, scale_codec, spike  # noqa: F401
 from repro.core.collectives import (  # noqa: F401
     compressed_psum, dispatch_all_to_all, grad_all_reduce,

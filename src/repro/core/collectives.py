@@ -78,7 +78,15 @@ def quantized_all_reduce(x: jnp.ndarray, axis: str,
     Phase 1: chunk + quantize + all_to_all + dequant + local reduce.
     Phase 2: re-quantize partial sum + all_gather + dequant.
     Matches the paper's fused kernel semantics (QDQ around each hop).
+
+    With ``cfg.scheme == "fused"`` the same two-step schedule runs as
+    actual fused kernels: quantize + pack + RDMA push + dequant + reduce
+    in one Pallas kernel per phase (``repro.kernels.rdma_allreduce`` on
+    TPU, the lockstep emulation in ``repro.kernels.emulate`` elsewhere).
     """
+    if cfg.scheme == "fused":
+        from repro.kernels import ops   # deferred: keeps core import-light
+        return ops.fused_all_reduce(x, axis, cfg, groups=groups)
     tp = _gsize(axis, groups)
     n = x.shape[-1]
     assert n % tp == 0 and (n // tp) % cfg.group == 0, (n, tp, cfg.group)
@@ -125,17 +133,21 @@ def quantized_all_to_all(x: jnp.ndarray, axis: str, cfg: CommConfig,
     """Quantized A2A for MoE dispatch. x: (tp, ..., d) rows to each peer.
 
     Only the dispatch payload is quantized (combine stays BF16), following
-    the paper / DeepSeek-V3. The last axis must be a multiple of group.
+    the paper / DeepSeek-V3. A last axis that is not a multiple of the
+    quantization group is zero-padded before encode and sliced back after
+    decode (same treatment as ``compressed_psum``), so MoE model dims
+    that don't divide the group no longer crash.
     """
     if not cfg.enabled:
         return lax.all_to_all(x, axis, split_axis, concat_axis, tiled=True,
                               axis_index_groups=groups)
     d = x.shape[-1]
-    assert d % cfg.group == 0, (d, cfg.group)
-    wire = codec.encode(x, cfg)
+    dp = padded_len(d, cfg.group)
+    wire = codec.encode(_pad_to(x, cfg.group), cfg)
     recv = lax.all_to_all(wire, axis, split_axis, concat_axis, tiled=True,
                           axis_index_groups=groups)
-    return codec.decode(recv, cfg, d, out_dtype=x.dtype)
+    out = codec.decode(recv, cfg, dp, out_dtype=x.dtype)
+    return out[..., :d]
 
 
 # --------------------------------------------------------------------------
@@ -206,7 +218,7 @@ def pipelined_hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str,
 def _flat_all_reduce(xf: jnp.ndarray, axes: Sequence[str],
                      cfg: CommConfig) -> jnp.ndarray:
     """Dispatch on scheme for a padded flat vector over (inner[, outer])."""
-    if cfg.scheme == "two_step" or len(axes) == 1:
+    if cfg.scheme in ("two_step", "fused") or len(axes) == 1:
         out = xf
         for ax in axes:  # sequential two-step per axis
             out = quantized_all_reduce(out, ax, cfg)
@@ -236,7 +248,7 @@ def compressed_psum(x: jnp.ndarray, axes: tuple, cfg: CommConfig,
     has no backward; training-side cotangent compression is a separate
     knob we deliberately keep exact.)
     """
-    if not cfg.enabled:
+    if not cfg.enabled or cfg.scheme == "nccl":
         out = x
         for ax in axes:
             out = lax.psum(out, ax, axis_index_groups=groups)

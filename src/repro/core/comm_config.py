@@ -26,7 +26,11 @@ BIT_UNITS = {
     8: (8,),
 }
 
-SCHEMES = ("nccl", "two_step", "hierarchical", "hier_pp")
+# Collective schedules: "nccl" is the uncompressed psum baseline,
+# "two_step" the Flash AR mapped onto XLA collectives, "fused" the same
+# two-step with codec+hop fused into Pallas kernels (RDMA on TPU,
+# lockstep emulation elsewhere), plus the hierarchical variants.
+SCHEMES = ("nccl", "two_step", "fused", "hierarchical", "hier_pp")
 
 # Wire-codec backends: "ref" is the pure-jnp path, "pallas" the fused
 # kernel path (interpret mode off-TPU), "auto" picks pallas on TPU.
@@ -64,6 +68,10 @@ class CommConfig:
     def with_backend(self, backend: str) -> "CommConfig":
         """Same config routed through a different codec backend."""
         return dataclasses.replace(self, backend=backend)
+
+    def with_scheme(self, scheme: str) -> "CommConfig":
+        """Same config routed through a different collective schedule."""
+        return dataclasses.replace(self, scheme=scheme)
 
     # ----- wire-size accounting (exact; used by Table 4/5 benches too) ---
 

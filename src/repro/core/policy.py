@@ -61,6 +61,27 @@ def with_backend(policy: CommPolicy, backend: str) -> CommPolicy:
         tp_bwd=_site(policy.tp_bwd))
 
 
+def with_scheme(policy: CommPolicy, scheme: str) -> CommPolicy:
+    """Route every enabled AllReduce site through one collective schedule.
+
+    ``scheme`` is any of :data:`repro.core.comm_config.SCHEMES` — e.g.
+    ``"fused"`` for the Pallas RDMA two-step kernels, ``"nccl"`` for the
+    uncompressed psum baseline. Only the psum-shaped sites (``tp``,
+    ``grad``, ``tp_bwd``) carry a schedule; the a2a / gather / scatter
+    sites keep theirs (the field is inert there). Disabled sites are left
+    untouched. This is the launch CLIs' ``--comm-scheme`` switch.
+    """
+    def _site(cfg: Optional[CommConfig]) -> Optional[CommConfig]:
+        if cfg is None or not cfg.enabled:
+            return cfg
+        return cfg.with_scheme(scheme)
+
+    return dataclasses.replace(
+        policy,
+        tp=_site(policy.tp), grad=_site(policy.grad),
+        tp_bwd=_site(policy.tp_bwd))
+
+
 # The paper's shipping configuration: INT8 g128 TP AllReduce, INT4 g32
 # MoE dispatch, hierarchical INT8 gradient sync across the slow bridge.
 def paper_policy(tp_bits: int = 8, a2a_bits: int = 4,

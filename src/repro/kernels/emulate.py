@@ -1,0 +1,135 @@
+"""Lockstep CPU emulation of the fused two-step AllReduce.
+
+The real thing (:mod:`repro.kernels.rdma_allreduce`) runs one Pallas
+kernel per phase on TPU: quantize + bit-split pack + RDMA push
+(``make_async_remote_copy``) + dequant + local reduce, all in VMEM.
+Remote DMA cannot execute off-TPU (jax 0.4.37 has no cross-device
+interpret mode), so this module runs the *same* per-phase kernel bodies
+— :func:`repro.kernels.wire.encode_tile` /
+:func:`repro.kernels.wire.decode_tile`, the exact functions the RDMA
+kernels call — as interpret-mode ``pallas_call``s on every shard, and
+replaces only the RDMA hop with the XLA collective the hardware push is
+equivalent to (``all_to_all`` for the scatter phase, ``all_gather`` for
+the gather phase) inside shard_map.
+
+Because the tile bodies are shared, the bytes this emulation puts on the
+(emulated) link are identical to both ``codec.encode`` and the compiled
+RDMA kernel's send buffers — enforced by tests/test_wire_golden.py and
+tests/test_fused_allreduce.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro import compat
+from repro.core.comm_config import CommConfig
+from repro.kernels.wire import decode_tile, encode_tile
+
+
+def _cfg_kw(cfg: CommConfig, chunk: int) -> dict:
+    return dict(bits=cfg.bits, group=cfg.group, n=chunk, spike=cfg.spike,
+                scale_int=cfg.scale_int, theta=cfg.theta,
+                meta_dtype=jnp.dtype(cfg.meta_dtype))
+
+
+# ---------------------------------------------------------------------------
+# per-phase kernels (grid=(1,), whole-shard tiles — shard shapes are small
+# and per-device, so no ROW_BLOCK tiling is needed here)
+# ---------------------------------------------------------------------------
+
+def _encode_kernel(x_ref, wire_ref, *, kw):
+    wire_ref[...] = encode_tile(x_ref[...], **kw)
+
+
+def _decode_reduce_kernel(wire_ref, partial_ref, *, kw, out_dtype):
+    parts = decode_tile(wire_ref[...], out_dtype=out_dtype, **kw)
+    partial_ref[...] = jnp.sum(parts, axis=0, keepdims=True)
+
+
+def _decode_kernel(wire_ref, out_ref, *, kw, out_dtype):
+    out_ref[...] = decode_tile(wire_ref[...], out_dtype=out_dtype, **kw)
+
+
+def encode_rows(x: jnp.ndarray, cfg: CommConfig,
+                interpret: bool = True) -> jnp.ndarray:
+    """(R, chunk) float -> (R, wire_bytes(chunk)) uint8, one kernel pass.
+
+    The phase-1 "quantize + pack" body (and, with R == 1, the phase-2
+    re-quantize body) of the fused AllReduce.
+    """
+    rows, chunk = x.shape
+    wb = cfg.wire_bytes(chunk)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, kw=_cfg_kw(cfg, chunk)),
+        out_shape=jax.ShapeDtypeStruct((rows, wb), jnp.uint8),
+        interpret=interpret,
+    )(x)
+
+
+def decode_reduce_rows(wire: jnp.ndarray, cfg: CommConfig, chunk: int,
+                       interpret: bool = True) -> jnp.ndarray:
+    """(R, wb) uint8 -> (1, chunk) f32: fused dequant + local reduce."""
+    rows = wire.shape[0]
+    assert wire.shape == (rows, cfg.wire_bytes(chunk))
+    return pl.pallas_call(
+        functools.partial(_decode_reduce_kernel, kw=_cfg_kw(cfg, chunk),
+                          out_dtype=jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((1, chunk), jnp.float32),
+        interpret=interpret,
+    )(wire)
+
+
+def decode_rows(wire: jnp.ndarray, cfg: CommConfig, chunk: int,
+                interpret: bool = True) -> jnp.ndarray:
+    """(R, wb) uint8 -> (R, chunk) f32: the phase-2 gather dequant."""
+    rows = wire.shape[0]
+    assert wire.shape == (rows, cfg.wire_bytes(chunk))
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, kw=_cfg_kw(cfg, chunk),
+                          out_dtype=jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rows, chunk), jnp.float32),
+        interpret=interpret,
+    )(wire)
+
+
+# ---------------------------------------------------------------------------
+# the emulated two-step AllReduce (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def fused_all_reduce_emulated(x: jnp.ndarray, axis: str, cfg: CommConfig,
+                              groups=None,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Flash two-step AR, fused-kernel choreography, RDMA emulated.
+
+    Phase 1 (scatter-reduce): one kernel encodes the tp per-peer chunks
+    into wire rows; the RDMA all-to-all push is emulated with
+    ``lax.all_to_all`` on the wire bytes; a second kernel dequantizes the
+    received rows and reduces them in the same pass.
+
+    Phase 2 (gather): the partial sum is re-encoded (same encode kernel,
+    R=1), the push-to-all is emulated with ``lax.all_gather``, and one
+    kernel dequantizes all tp wire rows back to the full vector.
+    """
+    if groups is not None:
+        tp = len(groups[0])
+    else:
+        tp = compat.axis_size(axis)
+    n = x.shape[-1]
+    assert n % tp == 0 and (n // tp) % cfg.group == 0, (n, tp, cfg.group)
+    chunk = n // tp
+
+    xc = x.reshape(tp, chunk).astype(jnp.float32)
+    wire = encode_rows(xc, cfg, interpret)                  # (tp, wb)
+    recv = lax.all_to_all(wire, axis, 0, 0, tiled=True,
+                          axis_index_groups=groups)         # rows from peers
+    partial = decode_reduce_rows(recv, cfg, chunk, interpret)   # (1, chunk)
+    wire2 = encode_rows(partial, cfg, interpret)            # (1, wb)
+    allw = lax.all_gather(wire2, axis, axis=0, tiled=True,
+                          axis_index_groups=groups)         # (tp, wb)
+    full = decode_rows(allw, cfg, chunk, interpret)         # (tp, chunk)
+    return full.reshape(n).astype(x.dtype)

@@ -7,9 +7,12 @@ to ROW_BLOCK transparently.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels import ref
 from repro.kernels.dequant_unpack import dequant_unpack
 from repro.kernels.quant_pack import ROW_BLOCK, quant_pack
@@ -111,3 +114,33 @@ def fused_decode_wire(buf: jnp.ndarray, cfg, n: int,
                       theta=cfg.theta, meta_dtype=cfg.meta_dtype,
                       out_dtype=out_dtype, interpret=_backend() != "tpu")
     return out[:rows]
+
+
+# --------------------------------------------------------------------------
+# fused two-step AllReduce (CommConfig.scheme == "fused")
+# --------------------------------------------------------------------------
+
+def fused_all_reduce(x: jnp.ndarray, axis: str, cfg,
+                     groups=None,
+                     mesh_axes: Sequence[str] | None = None) -> jnp.ndarray:
+    """Fused-kernel two-step AR on a flat (n,) vector (inside shard_map).
+
+    TPU: the real RDMA kernels (``repro.kernels.rdma_allreduce``) —
+    quantize + pack + ``make_async_remote_copy`` push + dequant + reduce,
+    one Pallas kernel per phase. Elsewhere (and for ``tp == 1`` or
+    ``axis_index_groups``, which the RDMA addressing doesn't cover): the
+    lockstep emulation (``repro.kernels.emulate``) running the same tile
+    bodies in interpret mode with the push emulated by XLA collectives.
+
+    ``mesh_axes`` (all mesh axis names, mesh order) is needed for MESH
+    device addressing on multi-axis meshes; when not given it is read
+    from the ambient shard_map axis env.
+    """
+    from repro.kernels import emulate
+    on_tpu = _backend() == "tpu"
+    if on_tpu and groups is None and compat.axis_size(axis) > 1:
+        from repro.kernels import rdma_allreduce
+        return rdma_allreduce.fused_all_reduce_rdma(
+            x, axis, cfg, mesh_axes=mesh_axes or compat.mesh_axis_names())
+    return emulate.fused_all_reduce_emulated(x, axis, cfg, groups=groups,
+                                             interpret=not on_tpu)

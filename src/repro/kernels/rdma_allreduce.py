@@ -1,0 +1,184 @@
+"""Fused two-step AllReduce as Pallas RDMA kernels (TPU).
+
+The paper's headline AllReduce win comes from *fusing* the codec with the
+collective: the tensor is read once, quantized, bit-split packed, and the
+wire bytes are pushed straight over the interconnect, with dequant +
+local reduce happening in the same kernel on the receiving side. This
+module is that schedule on TPU, one ``pallas_call`` per phase:
+
+phase 1 — scatter-reduce
+    Each device encodes its ``tp`` per-peer chunks into wire rows
+    (:func:`repro.kernels.wire.encode_tile`, the same body as the codec
+    kernels), RDMA-pushes row ``p`` to peer ``p`` with
+    ``pltpu.make_async_remote_copy``, then dequantizes the ``tp``
+    received rows and reduces them — quantize + pack + push + dequant +
+    reduce in one kernel, only wire bytes cross the link.
+
+phase 2 — gather
+    The partial sum is re-encoded (same encode body, one row), pushed to
+    every peer's gather buffer at slot ``my_id``, and all ``tp`` wire
+    rows are dequantized back to the full vector.
+
+Addressing uses ``DeviceIdType.MESH`` coordinates so the kernel works on
+multi-axis meshes: ``mesh_axes`` names every mesh axis in order and the
+peer coordinate only varies along the communicated ``axis``.
+
+Off TPU this cannot execute (remote DMA has no CPU lowering on the
+pinned jax); :mod:`repro.kernels.emulate` runs the same tile bodies with
+the push emulated by XLA collectives, and :func:`repro.kernels.ops.
+fused_all_reduce` picks between them. Compiled-TPU validation of this
+module is tracked in ROADMAP "Open items".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.core.comm_config import CommConfig
+from repro.kernels.wire import decode_tile, encode_tile
+
+
+def _cfg_kw(cfg: CommConfig, chunk: int) -> dict:
+    return dict(bits=cfg.bits, group=cfg.group, n=chunk, spike=cfg.spike,
+                scale_int=cfg.scale_int, theta=cfg.theta,
+                meta_dtype=jnp.dtype(cfg.meta_dtype))
+
+
+def _peer_coords(dst, axis: str, mesh_axes: Sequence[str]):
+    """MESH device id of the peer at index ``dst`` along ``axis``."""
+    return tuple(dst if a == axis else lax.axis_index(a)
+                 for a in mesh_axes)
+
+
+def _ring_barrier(my, tp: int, axis: str, mesh_axes: Sequence[str]):
+    """Block until every peer on ``axis`` reached this point: all comm
+    scratch buffers are live before any RDMA lands in them."""
+    barrier = pltpu.get_barrier_semaphore()
+    for i in range(1, tp):
+        pltpu.semaphore_signal(
+            barrier, inc=1,
+            device_id=_peer_coords((my + i) % tp, axis, mesh_axes),
+            device_id_type=pltpu.DeviceIdType.MESH)
+    pltpu.semaphore_wait(barrier, tp - 1)
+
+
+def _push_rows(src_buf, dst_buf, dst_row, send_sem, recv_sem, my, tp: int,
+               axis: str, mesh_axes: Sequence[str], src_row=None):
+    """Start tp-1 RDMA pushes and wait for the symmetric receives.
+
+    Iteration ``i`` sends to peer ``my + i`` and (by SPMD symmetry) the
+    matching receive into semaphore slot ``i - 1`` comes from peer
+    ``my - i``; waiting on each descriptor covers both directions.
+    """
+    rdmas = []
+    for i in range(1, tp):
+        dst = lax.rem(my + i, tp)
+        row = dst if src_row is None else src_row
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=src_buf.at[pl.ds(row, 1)],
+            dst_ref=dst_buf.at[pl.ds(dst_row, 1)],
+            send_sem=send_sem.at[i - 1],
+            recv_sem=recv_sem.at[i - 1],
+            device_id=_peer_coords(dst, axis, mesh_axes),
+            device_id_type=pltpu.DeviceIdType.MESH)
+        rdma.start()
+        rdmas.append(rdma)
+    for rdma in rdmas:
+        rdma.wait()
+
+
+# ---------------------------------------------------------------------------
+# phase kernels
+# ---------------------------------------------------------------------------
+
+def _scatter_reduce_kernel(x_ref, partial_ref, send_buf, recv_buf,
+                           send_sem, recv_sem, *, axis: str,
+                           mesh_axes: Sequence[str], tp: int, kw: dict):
+    my = lax.axis_index(axis)
+    wire = encode_tile(x_ref[...], **kw)                  # (tp, wb)
+    send_buf[...] = wire
+    _ring_barrier(my, tp, axis, mesh_axes)
+    # push row p of my wire to peer p; it lands in recv_buf[my] over there
+    _push_rows(send_buf, recv_buf, my, send_sem, recv_sem, my, tp,
+               axis, mesh_axes)
+    # own chunk never crossed the link: splice wire[my] in at row my
+    iota = lax.broadcasted_iota(jnp.int32, wire.shape, 0)
+    mixed = jnp.where(iota == my, wire, recv_buf[...])
+    parts = decode_tile(mixed, out_dtype=jnp.float32, **kw)
+    partial_ref[...] = jnp.sum(parts, axis=0, keepdims=True)
+
+
+def _gather_kernel(partial_ref, out_ref, send_buf, gather_buf,
+                   send_sem, recv_sem, *, axis: str,
+                   mesh_axes: Sequence[str], tp: int, kw: dict):
+    my = lax.axis_index(axis)
+    wire = encode_tile(partial_ref[...], **kw)            # (1, wb)
+    send_buf[...] = wire
+    _ring_barrier(my, tp, axis, mesh_axes)
+    # push my (single) partial-sum row into every peer's slot my
+    _push_rows(send_buf, gather_buf, my, send_sem, recv_sem, my, tp,
+               axis, mesh_axes, src_row=0)
+    iota = lax.broadcasted_iota(jnp.int32, (tp, wire.shape[1]), 0)
+    gathered = jnp.where(iota == my,
+                         jnp.broadcast_to(wire, (tp, wire.shape[1])),
+                         gather_buf[...])
+    out_ref[...] = decode_tile(gathered, out_dtype=jnp.float32, **kw)
+
+
+# ---------------------------------------------------------------------------
+# public entry point (call inside shard_map, TPU only)
+# ---------------------------------------------------------------------------
+
+def fused_all_reduce_rdma(x: jnp.ndarray, axis: str, cfg: CommConfig,
+                          mesh_axes: Sequence[str] | None = None
+                          ) -> jnp.ndarray:
+    """Fused two-step AR on a flat (n,) vector over one mesh axis.
+
+    Must be called inside shard_map on TPU with ``tp > 1``; pass
+    ``mesh_axes`` (all mesh axis names, in mesh order) when the mesh has
+    axes other than ``axis``. Wire bytes are identical to
+    ``codec.encode`` (shared tile bodies; see tests/test_wire_golden.py).
+    """
+    tp = compat.axis_size(axis)
+    assert tp > 1, "RDMA path needs peers; use the emulation for tp == 1"
+    n = x.shape[-1]
+    assert n % tp == 0 and (n // tp) % cfg.group == 0, (n, tp, cfg.group)
+    chunk = n // tp
+    wb = cfg.wire_bytes(chunk)
+    mesh_axes = tuple(mesh_axes) if mesh_axes else (axis,)
+    assert axis in mesh_axes, (axis, mesh_axes)
+    kw = _cfg_kw(cfg, chunk)
+
+    comm = dict(axis=axis, mesh_axes=mesh_axes, tp=tp, kw=kw)
+    partial = pl.pallas_call(
+        functools.partial(_scatter_reduce_kernel, **comm),
+        out_shape=jax.ShapeDtypeStruct((1, chunk), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tp, wb), jnp.uint8),       # send staging
+            pltpu.VMEM((tp, wb), jnp.uint8),       # per-sender receive
+            pltpu.SemaphoreType.DMA((tp - 1,)),
+            pltpu.SemaphoreType.DMA((tp - 1,)),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(collective_id=0),
+    )(x.reshape(tp, chunk).astype(jnp.float32))
+
+    full = pl.pallas_call(
+        functools.partial(_gather_kernel, **comm),
+        out_shape=jax.ShapeDtypeStruct((tp, chunk), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, wb), jnp.uint8),        # send staging
+            pltpu.VMEM((tp, wb), jnp.uint8),       # gather buffer
+            pltpu.SemaphoreType.DMA((tp - 1,)),
+            pltpu.SemaphoreType.DMA((tp - 1,)),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(collective_id=1),
+    )(partial)
+
+    return full.reshape(n).astype(x.dtype)

@@ -64,12 +64,19 @@ def _decode_scale_bytes(b: jnp.ndarray, theta: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# encode: float tile -> wire tile
+# shared tile bodies
+#
+# ``encode_tile`` / ``decode_tile`` are the complete per-tile kernel bodies
+# as pure (R, n) <-> (R, wire_bytes) array functions. They are shared by
+# three call sites that must stay byte-lockstep: the codec kernels below,
+# the fused RDMA AllReduce phase kernels (repro.kernels.rdma_allreduce)
+# and their CPU emulation (repro.kernels.emulate).
 # ---------------------------------------------------------------------------
 
-def _encode_kernel(x_ref, wire_ref, *, bits: int, group: int, n: int,
-                   spike: bool, scale_int: bool, theta: int, meta_dtype):
-    x = x_ref[...]                                        # (R, n)
+def encode_tile(x: jnp.ndarray, *, bits: int, group: int, n: int,
+                spike: bool, scale_int: bool, theta: int,
+                meta_dtype) -> jnp.ndarray:
+    """(R, n) float tile -> (R, wire_bytes(n)) uint8 wire tile."""
     rows = x.shape[0]
     g = n // group
 
@@ -80,37 +87,85 @@ def _encode_kernel(x_ref, wire_ref, *, bits: int, group: int, n: int,
         codes, scale_w, zero_w = quantize(x, bits, group, meta_dtype)
     codes = codes.reshape(rows, n)
 
-    off = 0
+    parts = []
     shift = 0
     for unit in BIT_UNITS[bits]:                          # bit splitting
         field = (codes >> shift) & ((1 << unit) - 1)
-        width = n * unit // 8
-        wire_ref[:, off:off + width] = _pack_plane(field, unit, n)
-        off += width
+        parts.append(_pack_plane(field, unit, n))
         shift += unit
 
     if scale_int:                                         # paper Eq. 1
-        wire_ref[:, off:off + g] = _encode_scale_bytes(scale_w, theta)
-        off += g
-        wire_ref[:, off:off + g] = scale_codec.encode_signed(zero_w, theta)
-        off += g
+        parts.append(_encode_scale_bytes(scale_w, theta))
+        parts.append(scale_codec.encode_signed(zero_w, theta))
     else:
-        wire_ref[:, off:off + 2 * g] = _meta_to_bytes(scale_w)
-        off += 2 * g
-        wire_ref[:, off:off + 2 * g] = _meta_to_bytes(zero_w)
-        off += 2 * g
+        parts.append(_meta_to_bytes(scale_w))
+        parts.append(_meta_to_bytes(zero_w))
 
     if spike:                                             # paper Fig. 5c
         sv = q.spike_vals.reshape(rows, 2 * g)            # exact bf16
-        wire_ref[:, off:off + 4 * g] = _meta_to_bytes(sv)
-        off += 4 * g
+        parts.append(_meta_to_bytes(sv))
         si = q.spike_idx.reshape(rows, 2 * g)
         if scale_int:                                     # int8 indices
-            wire_ref[:, off:off + 2 * g] = \
-                jax.lax.bitcast_convert_type(si, jnp.uint8)
+            parts.append(jax.lax.bitcast_convert_type(si, jnp.uint8))
         else:                                             # bf16 baseline
-            wire_ref[:, off:off + 4 * g] = _meta_to_bytes(
-                si.astype(meta_dtype))
+            parts.append(_meta_to_bytes(si.astype(meta_dtype)))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def decode_tile(wire: jnp.ndarray, *, bits: int, group: int, n: int,
+                spike: bool, scale_int: bool, theta: int, meta_dtype,
+                out_dtype) -> jnp.ndarray:
+    """(R, wire_bytes(n)) uint8 wire tile -> (R, n) out_dtype tile."""
+    rows = wire.shape[0]
+    g = n // group
+
+    codes = jnp.zeros((rows, n), jnp.uint8)
+    off = 0
+    shift = 0
+    for unit in BIT_UNITS[bits]:
+        width = n * unit // 8
+        field = _unpack_plane(wire[:, off:off + width], unit, n)
+        codes = codes | ((field.astype(jnp.uint32) << shift)
+                         .astype(jnp.uint8))
+        off += width
+        shift += unit
+
+    if scale_int:
+        scale = _decode_scale_bytes(wire[:, off:off + g], theta)
+        off += g
+        zero = scale_codec.decode_signed(wire[:, off:off + g], theta)
+        off += g
+    else:
+        scale = _bytes_to_meta(wire[:, off:off + 2 * g], meta_dtype, g)
+        off += 2 * g
+        zero = _bytes_to_meta(wire[:, off:off + 2 * g], meta_dtype, g)
+        off += 2 * g
+
+    codes = codes.reshape(rows, g, group)
+    if spike:
+        sv = _bytes_to_meta(wire[:, off:off + 4 * g], meta_dtype, 2 * g)
+        off += 4 * g
+        if scale_int:
+            si = jax.lax.bitcast_convert_type(
+                wire[:, off:off + 2 * g], jnp.int8)
+        else:
+            si = _bytes_to_meta(wire[:, off:off + 4 * g],
+                                meta_dtype, 2 * g).astype(jnp.int8)
+        q = SpikeQuant(codes, scale, zero,
+                       sv.reshape(rows, g, 2), si.reshape(rows, g, 2))
+        return spike_dequantize(q, out_dtype)
+    return dequantize(codes, scale, zero, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# encode: float tile -> wire tile
+# ---------------------------------------------------------------------------
+
+def _encode_kernel(x_ref, wire_ref, *, bits: int, group: int, n: int,
+                   spike: bool, scale_int: bool, theta: int, meta_dtype):
+    wire_ref[...] = encode_tile(
+        x_ref[...], bits=bits, group=group, n=n, spike=spike,
+        scale_int=scale_int, theta=theta, meta_dtype=meta_dtype)
 
 
 @functools.partial(jax.jit,
@@ -148,46 +203,10 @@ def encode_wire(x: jnp.ndarray, *, bits: int, group: int, spike: bool,
 def _decode_kernel(wire_ref, out_ref, *, bits: int, group: int, n: int,
                    spike: bool, scale_int: bool, theta: int, meta_dtype,
                    out_dtype):
-    rows = wire_ref.shape[0]
-    g = n // group
-
-    codes = jnp.zeros((rows, n), jnp.uint8)
-    off = 0
-    shift = 0
-    for unit in BIT_UNITS[bits]:
-        width = n * unit // 8
-        field = _unpack_plane(wire_ref[:, off:off + width], unit, n)
-        codes = codes | ((field.astype(jnp.uint32) << shift)
-                         .astype(jnp.uint8))
-        off += width
-        shift += unit
-
-    if scale_int:
-        scale = _decode_scale_bytes(wire_ref[:, off:off + g], theta)
-        off += g
-        zero = scale_codec.decode_signed(wire_ref[:, off:off + g], theta)
-        off += g
-    else:
-        scale = _bytes_to_meta(wire_ref[:, off:off + 2 * g], meta_dtype, g)
-        off += 2 * g
-        zero = _bytes_to_meta(wire_ref[:, off:off + 2 * g], meta_dtype, g)
-        off += 2 * g
-
-    codes = codes.reshape(rows, g, group)
-    if spike:
-        sv = _bytes_to_meta(wire_ref[:, off:off + 4 * g], meta_dtype, 2 * g)
-        off += 4 * g
-        if scale_int:
-            si = jax.lax.bitcast_convert_type(
-                wire_ref[:, off:off + 2 * g], jnp.int8)
-        else:
-            si = _bytes_to_meta(wire_ref[:, off:off + 4 * g],
-                                meta_dtype, 2 * g).astype(jnp.int8)
-        q = SpikeQuant(codes, scale, zero,
-                       sv.reshape(rows, g, 2), si.reshape(rows, g, 2))
-        out_ref[...] = spike_dequantize(q, out_dtype)
-    else:
-        out_ref[...] = dequantize(codes, scale, zero, out_dtype)
+    out_ref[...] = decode_tile(
+        wire_ref[...], bits=bits, group=group, n=n, spike=spike,
+        scale_int=scale_int, theta=theta, meta_dtype=meta_dtype,
+        out_dtype=out_dtype)
 
 
 @functools.partial(jax.jit,

@@ -14,8 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.comm_config import SCHEMES
 from repro.core.policy import (BF16_POLICY, aggressive_policy,
-                               paper_policy, with_backend)
+                               paper_policy, with_backend, with_scheme)
 from repro.launch.mesh import make_test_mesh
 from repro.models.model import param_groups
 from repro.parallel.plan import make_plan
@@ -40,6 +41,10 @@ def main(argv=None):
     ap.add_argument("--codec-backend", default="auto",
                     choices=("auto", "ref", "pallas"),
                     help="wire codec backend for every comm site")
+    ap.add_argument("--comm-scheme", default=None, choices=SCHEMES,
+                    help="override the AllReduce schedule at every "
+                         "enabled site (e.g. 'fused' for the Pallas "
+                         "RDMA two-step kernels)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -47,6 +52,8 @@ def main(argv=None):
     mesh = make_test_mesh(data=data_n, model=model_n)
     plan = make_plan(cfg, tp=model_n, fsdp=data_n)
     policy = with_backend(POLICIES[args.policy](), args.codec_backend)
+    if args.comm_scheme:
+        policy = with_scheme(policy, args.comm_scheme)
     cache_len = args.prompt_len + args.gen
 
     store = build_store(param_groups(cfg, plan), plan,

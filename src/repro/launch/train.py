@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.comm_config import SCHEMES
 from repro.core.policy import (BF16_POLICY, aggressive_policy,
-                               paper_policy, with_backend)
+                               paper_policy, with_backend, with_scheme)
 from repro.launch.mesh import make_test_mesh
 from repro.models.model import param_groups
 from repro.parallel.plan import make_plan
@@ -49,6 +50,10 @@ def main(argv=None):
     ap.add_argument("--codec-backend", default="auto",
                     choices=("auto", "ref", "pallas"),
                     help="wire codec backend for every comm site")
+    ap.add_argument("--comm-scheme", default=None, choices=SCHEMES,
+                    help="override the AllReduce schedule at every "
+                         "enabled site (e.g. 'fused' for the Pallas "
+                         "RDMA two-step kernels)")
     ap.add_argument("--n-micro", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", default=None)
@@ -60,6 +65,8 @@ def main(argv=None):
     mesh = make_test_mesh(data=data_n, model=model_n)
     plan = make_plan(cfg, tp=model_n, fsdp=data_n)
     policy = with_backend(POLICIES[args.policy](), args.codec_backend)
+    if args.comm_scheme:
+        policy = with_scheme(policy, args.comm_scheme)
     opt_cfg = OptimConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
                           total_steps=args.steps)
 

@@ -28,7 +28,7 @@ def check_quantized_ar():
     mesh = make_test_mesh(data=1, model=4, pod=2)
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 3, 640), jnp.float32)
     ref = np.sum(np.asarray(x), axis=0)
-    for scheme in ("two_step", "hierarchical", "hier_pp"):
+    for scheme in ("two_step", "fused", "hierarchical", "hier_pp"):
         for bits in (8, 5, 2):
             cfg = default_comm_config(bits, scheme=scheme)
 
@@ -51,6 +51,35 @@ def check_quantized_ar():
     print("quantized_ar ok")
 
 
+def check_fused_ar():
+    """scheme="fused" (emulation backend on CPU) is numerically identical
+    to the XLA two-step on 8 devices: same wire bytes, same reduce order
+    — the lockstep guarantee the shared tile bodies provide."""
+    from repro.core.comm_config import CommConfig
+
+    mesh = make_test_mesh(data=1, model=8)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 3, 1280), jnp.float32)
+    ref = np.sum(np.asarray(x), axis=0)
+    for bits, spike, scale_int in ((8, False, False), (4, False, True),
+                                   (2, True, True)):
+        outs = {}
+        for scheme in ("two_step", "fused"):
+            cfg = CommConfig(bits=bits, group=32, spike=spike,
+                             scale_int=scale_int, scheme=scheme)
+
+            @partial(compat.shard_map, mesh=mesh,
+                     in_specs=P(("data", "model")),
+                     out_specs=P(("data", "model")), check_vma=False)
+            def f(xs):
+                return compressed_psum(xs[0], ("model",), cfg)[None]
+
+            outs[scheme] = np.asarray(jax.jit(f)(x))
+        np.testing.assert_array_equal(outs["fused"], outs["two_step"])
+        err = float(np.max(np.abs(outs["fused"][0] - ref)))
+        assert err < {8: 0.3, 4: 12.0, 2: 16.0}[bits], (bits, err)
+    print("fused_ar ok (bit-identical to two_step)")
+
+
 def check_a2a_semantics():
     mesh = make_test_mesh(data=2, model=4)
     cfg = default_comm_config(4)
@@ -66,6 +95,16 @@ def check_a2a_semantics():
     for i in range(4):
         for j in range(4):
             want = np.asarray(qdq_wire(xa[j, i], cfg))
+            np.testing.assert_allclose(out[i, j], want, atol=1e-6)
+
+    # regression: last axis not a multiple of cfg.group (pad/unpad path)
+    d, dp = 100, 128
+    xb = jax.random.normal(jax.random.PRNGKey(5), (4, 4, 2, d), jnp.float32)
+    out = np.asarray(g(xb))
+    for i in range(4):
+        for j in range(4):
+            blk = jnp.pad(xb[j, i], ((0, 0), (0, dp - d)))
+            want = np.asarray(qdq_wire(blk, cfg))[..., :d]
             np.testing.assert_allclose(out[i, j], want, atol=1e-6)
     print("a2a ok")
 
@@ -231,6 +270,7 @@ def check_ep_slice():
 
 CHECKS = {
     "quantized_ar": check_quantized_ar,
+    "fused_ar": check_fused_ar,
     "a2a": check_a2a_semantics,
     "train_two_policies": check_train_two_policies,
     "tp_equivalence": check_tp_equivalence,
