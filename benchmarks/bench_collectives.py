@@ -1,15 +1,17 @@
-"""Collective-level benchmark: the full AllReduce schedules, not just
+"""Collective-level benchmark: the full collective schedules, not just
 the codec.
 
 bench_kernels times encode/decode in isolation; this bench times the
 whole quantized AllReduce — chunk + QDQ + hop + reduce + hop — for every
 scheme (uncompressed ``nccl`` psum baseline, XLA ``two_step``, the fused
-Pallas ``fused`` path, and the ``hierarchical`` variants) on 8 fake CPU
-devices, plus the exact per-rank wire footprint each scheme puts on the
-link. CPU wall times are schedule-overhead proxies (no real ICI), but
-they make scheme regressions visible and give the fused path a tracked
-number; rows land in benchmarks/results/collectives.json like every
-other bench.
+Pallas ``fused`` path, and the ``hierarchical`` variants) AND the MoE
+dispatch All2All (``a2a_nccl`` exact baseline, ``a2a_two_step`` codec
+around ``lax.all_to_all``, ``a2a_fused`` single-kernel path) on 8 fake
+CPU devices, plus the exact per-rank wire footprint each scheme puts on
+the link. CPU wall times are schedule-overhead proxies (no real ICI),
+but they make scheme regressions visible and give the fused paths a
+tracked number; rows land in benchmarks/results/collectives.json like
+every other bench.
 
 XLA pins the device count at first jax init, so the measurement runs in
 a subprocess with ``--xla_force_host_platform_device_count=8`` (same
@@ -35,13 +37,15 @@ def _worker(fast: bool):
 
     from benchmarks.common import timeit
     from repro import compat
-    from repro.core import compressed_psum, default_comm_config
+    from repro.core import (compressed_psum, default_comm_config,
+                            dispatch_all_to_all)
     from repro.launch.mesh import make_test_mesh
 
     rows = []
     sizes = FAST_SIZES if fast else SIZES
     mesh = make_test_mesh(data=1, model=4, pod=2)
     dev = 8
+    a2a_tp = 4                                # the "model" axis size
 
     def bench_one(cfg, axes, n, label, bits):
         @functools.partial(compat.shard_map, mesh=mesh,
@@ -59,6 +63,28 @@ def _worker(fast: bool):
                      "wire_bytes_per_rank": wire,
                      "value": round(us, 1), "unit": "us"})
 
+    def bench_a2a(cfg, n, label, bits):
+        # MoE-dispatch shape: tp per-peer blocks of n/tp values, d=512
+        d = 512
+        m = n // (a2a_tp * d)
+
+        @functools.partial(compat.shard_map, mesh=mesh,
+                           in_specs=P(("pod", "data", "model")),
+                           out_specs=P(("pod", "data", "model")),
+                           check_vma=False)
+        def f(xs):
+            return dispatch_all_to_all(xs[0], "model", cfg)[None]
+
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (dev, a2a_tp, m, d), jnp.float32)
+        us = timeit(jax.jit(f), x, reps=5, warmup=2)
+        wire = (a2a_tp * m * cfg.wire_bytes(d)
+                if cfg.enabled and cfg.scheme != "nccl"
+                else 4 * n)
+        rows.append({"scheme": label, "bits": bits, "n": n,
+                     "wire_bytes_per_rank": wire,
+                     "value": round(us, 1), "unit": "us"})
+
     for n in sizes:
         baseline = default_comm_config(8, scheme="nccl")
         bench_one(baseline, ("model", "pod"), n, "nccl", 32)
@@ -66,6 +92,13 @@ def _worker(fast: bool):
             for scheme in ("two_step", "fused", "hierarchical", "hier_pp"):
                 cfg = default_comm_config(bits, scheme=scheme)
                 bench_one(cfg, ("model", "pod"), n, scheme, bits)
+        # the MoE dispatch A2A: exact baseline, XLA codec path, fused
+        bench_a2a(default_comm_config(8, scheme="nccl"), n,
+                  "a2a_nccl", 32)
+        for bits in BITS:
+            for scheme in ("two_step", "fused"):
+                cfg = default_comm_config(bits, scheme=scheme)
+                bench_a2a(cfg, n, f"a2a_{scheme}", bits)
     print(json.dumps(rows))
 
 

@@ -2,12 +2,17 @@
 
     PYTHONPATH=src python scripts/gen_golden_wire.py
 
-Writes tests/golden/wire_vectors.npz: one fixed input tensor plus the
-reference-backend encoded buffer for every width 2-8 x spike on/off
-(paper-default group sizes, BF16 metadata). tests/test_wire_golden.py
-asserts byte-for-byte equality against these on every codec backend, so
-a codec refactor that changes the on-link bytes fails loudly instead of
-silently shifting the wire format.
+Writes tests/golden/wire_vectors.npz: a fixed 2-D input tensor ("x")
+plus its reference-backend encoded buffer for every width 2-8 x spike
+on/off (paper-default group sizes, BF16 metadata), and a fixed
+A2A-shaped per-peer-chunk tensor ("xa", (peers, rows, d)) plus its
+encoded per-peer wire chunks ("a2a_int*") for the same width x spike
+grid — the exact blocks the fused All2All stages as RDMA chunks.
+tests/test_wire_golden.py asserts byte-for-byte equality against these
+on every codec backend and on the fused-collective encode paths, so a
+codec refactor cannot silently change the on-link bytes (and
+tests/test_wire_golden.py's drift guard asserts a rerun of this script
+reproduces the committed file).
 
 Only rerun this when the wire format is *deliberately* changed, and say
 so in the commit message.
@@ -25,6 +30,7 @@ OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                    "tests", "golden", "wire_vectors.npz")
 
 ROWS, N = 4, 256
+PEERS, PEER_ROWS, PEER_D = 4, 2, 128     # A2A per-peer chunk shape
 SEED = 20250802
 
 
@@ -43,19 +49,34 @@ def golden_input() -> np.ndarray:
     return x
 
 
-def main():
+def golden_a2a_input() -> np.ndarray:
+    """Per-peer dispatch blocks: (peers, rows_per_peer, d)."""
+    rng = np.random.default_rng(SEED + 1)
+    xa = (rng.standard_normal((PEERS, PEER_ROWS, PEER_D)) * 3
+          ).astype(np.float32)
+    xa[0, 0, 5] = 38.0           # planted spikes, one per quadrant-ish
+    xa[2, 1, 64] = -33.0
+    return xa
+
+
+def main(out: str = OUT):
     import jax.numpy as jnp
     x = golden_input()
-    arrays = {"x": x}
+    xa = golden_a2a_input()
+    arrays = {"x": x, "xa": xa}
     for bits in range(2, 9):
         for spike in (False, True):
             cfg = golden_cfg(bits, spike)
+            sr = "_sr" if spike else ""
             buf = codec.encode(jnp.asarray(x), cfg)
-            arrays[f"int{bits}{'_sr' if spike else ''}"] = np.asarray(buf)
-    os.makedirs(os.path.dirname(OUT), exist_ok=True)
-    np.savez(OUT, **arrays)
+            arrays[f"int{bits}{sr}"] = np.asarray(buf)
+            # the A2A wire: per-peer chunks, (peers, rows, wire_bytes(d))
+            bufa = codec.encode(jnp.asarray(xa), cfg)
+            arrays[f"a2a_int{bits}{sr}"] = np.asarray(bufa)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    np.savez(out, **arrays)
     total = sum(a.nbytes for a in arrays.values())
-    print(f"wrote {OUT}: {len(arrays) - 1} vectors, {total} bytes")
+    print(f"wrote {out}: {len(arrays) - 2} vectors, {total} bytes")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,8 @@ ZeRO++-style qAG/qRS (beyond)    ``quantized_all_gather`` /
 Gradient notes: every collective here carries its *true* transpose so
 ``jax.grad`` inside shard_map (with per-rank loss seeding) is exact:
 ``compressed_psum`` transposes to a psum of cotangents (the Megatron
-f-operator all-reduce), ``fsdp_all_gather`` to a reduce-scatter, and
+f-operator all-reduce), ``fsdp_all_gather`` / ``quantized_all_gather``
+to a reduce-scatter, ``quantized_reduce_scatter`` to an all-gather, and
 ``quantized_all_to_all`` to a full-precision all_to_all in the reverse
 direction (dispatch is quantized, combine stays BF16, following
 DeepSeek-V3 / the paper). Quantization itself is straight-through.
@@ -103,9 +104,15 @@ def quantized_all_reduce(x: jnp.ndarray, axis: str,
     return full.reshape(n).astype(x.dtype)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def quantized_reduce_scatter(x: jnp.ndarray, axis: str,
                              cfg: CommConfig) -> jnp.ndarray:
-    """Quantized RS: (n,) -> (n/tp,) summed chunk (phase 1 of two-step)."""
+    """Quantized RS: (n,) -> (n/tp,) summed chunk (phase 1 of two-step).
+
+    Transpose (bwd) is the exact all_gather of cotangents — the true
+    transpose of a tiled reduce-scatter — so jax.grad through it under
+    per-rank seeding is exact (tests/test_collective_properties.py).
+    """
     tp = compat.axis_size(axis)
     n = x.shape[-1]
     assert n % tp == 0 and (n // tp) % cfg.group == 0
@@ -116,15 +123,46 @@ def quantized_reduce_scatter(x: jnp.ndarray, axis: str,
     return jnp.sum(parts, axis=0).astype(x.dtype)
 
 
+def _qrs_fwd(x, axis, cfg):
+    return quantized_reduce_scatter(x, axis, cfg), None
+
+
+def _qrs_bwd(axis, cfg, res, g):
+    del res
+    return (lax.all_gather(g, axis, axis=0, tiled=True),)
+
+
+quantized_reduce_scatter.defvjp(_qrs_fwd, _qrs_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def quantized_all_gather(x: jnp.ndarray, axis: str,
                          cfg: CommConfig) -> jnp.ndarray:
-    """Quantized AG: (k,) -> (tp*k,). ZeRO++-style weight gather."""
+    """Quantized AG: (k,) -> (tp*k,). ZeRO++-style weight gather.
+
+    Transpose (bwd) is the exact psum_scatter of cotangents — the true
+    transpose of a tiled all_gather — matching ``fsdp_all_gather``'s
+    reduce-scatter transpose; gradients stay exact under quantized
+    forward (tests/test_collective_properties.py).
+    """
     n = x.shape[-1]
     assert n % cfg.group == 0
     wire = codec.encode(x, cfg)
     allw = lax.all_gather(wire, axis, axis=0)            # (tp, w)
     full = codec.decode(allw, cfg, n)
     return full.reshape(-1).astype(x.dtype)
+
+
+def _qag_fwd(x, axis, cfg):
+    return quantized_all_gather(x, axis, cfg), None
+
+
+def _qag_bwd(axis, cfg, res, g):
+    del res
+    return (lax.psum_scatter(g, axis, scatter_dimension=0, tiled=True),)
+
+
+quantized_all_gather.defvjp(_qag_fwd, _qag_bwd)
 
 
 def quantized_all_to_all(x: jnp.ndarray, axis: str, cfg: CommConfig,
@@ -137,12 +175,26 @@ def quantized_all_to_all(x: jnp.ndarray, axis: str, cfg: CommConfig,
     quantization group is zero-padded before encode and sliced back after
     decode (same treatment as ``compressed_psum``), so MoE model dims
     that don't divide the group no longer crash.
+
+    Schemes: ``cfg.scheme == "nccl"`` bypasses the codec entirely (the
+    exact BF16 baseline, mirroring ``compressed_psum``); with
+    ``"fused"`` (and the standard split/concat axis 0 used by MoE
+    dispatch) the quantize + per-peer push + dequant run as one fused
+    kernel (``repro.kernels.rdma_all2all`` on TPU, the lockstep
+    emulation elsewhere) — bit-identical to this XLA path by
+    construction (shared tile bodies). Everything else runs codec
+    around a plain ``lax.all_to_all``.
     """
-    if not cfg.enabled:
+    if not cfg.enabled or cfg.scheme == "nccl":
         return lax.all_to_all(x, axis, split_axis, concat_axis, tiled=True,
                               axis_index_groups=groups)
     d = x.shape[-1]
     dp = padded_len(d, cfg.group)
+    if cfg.scheme == "fused" and split_axis == 0 and concat_axis == 0:
+        from repro.kernels import ops   # deferred: keeps core import-light
+        out = ops.fused_all_to_all(_pad_to(x, cfg.group), axis, cfg,
+                                   groups=groups)
+        return out[..., :d]
     wire = codec.encode(_pad_to(x, cfg.group), cfg)
     recv = lax.all_to_all(wire, axis, split_axis, concat_axis, tiled=True,
                           axis_index_groups=groups)

@@ -26,10 +26,12 @@ BIT_UNITS = {
     8: (8,),
 }
 
-# Collective schedules: "nccl" is the uncompressed psum baseline,
-# "two_step" the Flash AR mapped onto XLA collectives, "fused" the same
-# two-step with codec+hop fused into Pallas kernels (RDMA on TPU,
-# lockstep emulation elsewhere), plus the hierarchical variants.
+# Collective schedules: "nccl" is the uncompressed exact baseline
+# (psum / plain all_to_all), "two_step" the Flash AR mapped onto XLA
+# collectives, "fused" the codec+hop fused into Pallas kernels (RDMA on
+# TPU, lockstep emulation elsewhere) — the two-step AllReduce at psum
+# sites and the per-peer-push All2All at the MoE dispatch site — plus
+# the hierarchical AR variants.
 SCHEMES = ("nccl", "two_step", "fused", "hierarchical", "hier_pp")
 
 # Wire-codec backends: "ref" is the pure-jnp path, "pallas" the fused

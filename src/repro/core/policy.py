@@ -62,14 +62,16 @@ def with_backend(policy: CommPolicy, backend: str) -> CommPolicy:
 
 
 def with_scheme(policy: CommPolicy, scheme: str) -> CommPolicy:
-    """Route every enabled AllReduce site through one collective schedule.
+    """Route every enabled scheduled site through one collective schedule.
 
     ``scheme`` is any of :data:`repro.core.comm_config.SCHEMES` — e.g.
-    ``"fused"`` for the Pallas RDMA two-step kernels, ``"nccl"`` for the
-    uncompressed psum baseline. Only the psum-shaped sites (``tp``,
-    ``grad``, ``tp_bwd``) carry a schedule; the a2a / gather / scatter
-    sites keep theirs (the field is inert there). Disabled sites are left
-    untouched. This is the launch CLIs' ``--comm-scheme`` switch.
+    ``"fused"`` for the Pallas RDMA kernels (the two-step AllReduce at
+    the psum-shaped sites ``tp`` / ``grad`` / ``tp_bwd``, the fused
+    per-peer-push A2A at the MoE ``a2a`` dispatch site), ``"nccl"`` for
+    the uncompressed exact baseline at all four. The gather / scatter
+    sites (``qag``, ``qgrad_rs``) keep theirs (the field is inert
+    there). Disabled sites are left untouched. This is the launch CLIs'
+    ``--comm-scheme`` switch.
     """
     def _site(cfg: Optional[CommConfig]) -> Optional[CommConfig]:
         if cfg is None or not cfg.enabled:
@@ -79,7 +81,7 @@ def with_scheme(policy: CommPolicy, scheme: str) -> CommPolicy:
     return dataclasses.replace(
         policy,
         tp=_site(policy.tp), grad=_site(policy.grad),
-        tp_bwd=_site(policy.tp_bwd))
+        tp_bwd=_site(policy.tp_bwd), a2a=_site(policy.a2a))
 
 
 # The paper's shipping configuration: INT8 g128 TP AllReduce, INT4 g32

@@ -3,11 +3,14 @@
 The paper fuses quantize+pack (and unpack+dequantize) with the collective
 so only wire bytes touch the link. These kernels are the TPU analogue —
 validated in interpret mode on CPU, targeted at VMEM tiles on TPU — up
-to and including the collective itself: ``fused_all_reduce`` is the
+to and including the collectives themselves: ``fused_all_reduce`` is the
 two-step AllReduce with the codec and the RDMA hop fused into one Pallas
 kernel per phase (``rdma_allreduce`` on TPU, the lockstep ``emulate``
-backend elsewhere).
+backend elsewhere), and ``fused_all_to_all`` is the MoE-dispatch A2A
+with quantize + per-peer RDMA push + dequant fused into a single kernel
+(``rdma_all2all`` on TPU, same emulation elsewhere).
 """
 from repro.kernels.ops import (  # noqa: F401
-    fused_all_reduce, fused_decode_wire, fused_dequant_unpack,
-    fused_encode_wire, fused_quant_pack, fused_spike_pack)
+    fused_all_reduce, fused_all_to_all, fused_decode_wire,
+    fused_dequant_unpack, fused_encode_wire, fused_quant_pack,
+    fused_spike_pack)

@@ -1,21 +1,22 @@
-"""Lockstep CPU emulation of the fused two-step AllReduce.
+"""Lockstep CPU emulation of the fused RDMA collectives.
 
-The real thing (:mod:`repro.kernels.rdma_allreduce`) runs one Pallas
-kernel per phase on TPU: quantize + bit-split pack + RDMA push
-(``make_async_remote_copy``) + dequant + local reduce, all in VMEM.
-Remote DMA cannot execute off-TPU (jax 0.4.37 has no cross-device
-interpret mode), so this module runs the *same* per-phase kernel bodies
-— :func:`repro.kernels.wire.encode_tile` /
+The real things (:mod:`repro.kernels.rdma_allreduce`,
+:mod:`repro.kernels.rdma_all2all`) run Pallas kernels on TPU: quantize +
+bit-split pack + RDMA push (``make_async_remote_copy``) + dequant
+(+ local reduce for the AllReduce), all in VMEM. Remote DMA cannot
+execute off-TPU (jax 0.4.37 has no cross-device interpret mode), so this
+module runs the *same* kernel bodies —
+:func:`repro.kernels.wire.encode_tile` /
 :func:`repro.kernels.wire.decode_tile`, the exact functions the RDMA
 kernels call — as interpret-mode ``pallas_call``s on every shard, and
 replaces only the RDMA hop with the XLA collective the hardware push is
-equivalent to (``all_to_all`` for the scatter phase, ``all_gather`` for
-the gather phase) inside shard_map.
+equivalent to (``all_to_all`` for the scatter phase and the A2A
+dispatch, ``all_gather`` for the gather phase) inside shard_map.
 
 Because the tile bodies are shared, the bytes this emulation puts on the
 (emulated) link are identical to both ``codec.encode`` and the compiled
-RDMA kernel's send buffers — enforced by tests/test_wire_golden.py and
-tests/test_fused_allreduce.py.
+RDMA kernels' send buffers — enforced by tests/test_wire_golden.py,
+tests/test_fused_allreduce.py and tests/test_fused_all2all.py.
 """
 from __future__ import annotations
 
@@ -85,14 +86,19 @@ def decode_reduce_rows(wire: jnp.ndarray, cfg: CommConfig, chunk: int,
 
 
 def decode_rows(wire: jnp.ndarray, cfg: CommConfig, chunk: int,
-                interpret: bool = True) -> jnp.ndarray:
-    """(R, wb) uint8 -> (R, chunk) f32: the phase-2 gather dequant."""
+                interpret: bool = True,
+                out_dtype=jnp.float32) -> jnp.ndarray:
+    """(R, wb) uint8 -> (R, chunk): the receive-side dequant.
+
+    The phase-2 gather dequant of the fused AllReduce (f32 default) and,
+    with ``out_dtype`` set, the A2A receive dequant (payload dtype).
+    """
     rows = wire.shape[0]
     assert wire.shape == (rows, cfg.wire_bytes(chunk))
     return pl.pallas_call(
         functools.partial(_decode_kernel, kw=_cfg_kw(cfg, chunk),
-                          out_dtype=jnp.float32),
-        out_shape=jax.ShapeDtypeStruct((rows, chunk), jnp.float32),
+                          out_dtype=jnp.dtype(out_dtype)),
+        out_shape=jax.ShapeDtypeStruct((rows, chunk), jnp.dtype(out_dtype)),
         interpret=interpret,
     )(wire)
 
@@ -133,3 +139,42 @@ def fused_all_reduce_emulated(x: jnp.ndarray, axis: str, cfg: CommConfig,
                           axis_index_groups=groups)         # (tp, wb)
     full = decode_rows(allw, cfg, chunk, interpret)         # (tp, chunk)
     return full.reshape(n).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the emulated fused All2All (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def fused_all_to_all_emulated(x: jnp.ndarray, axis: str, cfg: CommConfig,
+                              groups=None,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Fused quantized A2A choreography, RDMA emulated.
+
+    One kernel encodes all ``tp`` per-peer blocks of ``x`` (shape
+    ``(tp, ..., d)``, ``d`` a group multiple — the collectives layer
+    pads) into wire rows; the per-peer RDMA push of
+    :mod:`repro.kernels.rdma_all2all` is emulated with
+    ``lax.all_to_all`` on the wire bytes; a second kernel dequantizes
+    the received blocks straight to the payload dtype. Bit-identical to
+    the XLA ``quantized_all_to_all`` wire (same encode bytes, same hop,
+    same dequant body — tests/_multidev_script.py ``fused_a2a``).
+    """
+    if groups is not None:
+        tp = len(groups[0])
+    else:
+        tp = compat.axis_size(axis)
+    assert x.shape[0] == tp, (x.shape, tp)
+    d = x.shape[-1]
+    assert d % cfg.group == 0, (d, cfg.group)
+    wb = cfg.wire_bytes(d)
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    m = rows // tp
+
+    wire = encode_rows(x.reshape(rows, d), cfg, interpret)  # (tp*m, wb)
+    recv = lax.all_to_all(wire.reshape(tp, m, wb), axis, 0, 0, tiled=True,
+                          axis_index_groups=groups)         # blocks from peers
+    out = decode_rows(recv.reshape(rows, wb), cfg, d, interpret,
+                      out_dtype=x.dtype)
+    return out.reshape(x.shape)

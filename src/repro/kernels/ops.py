@@ -144,3 +144,31 @@ def fused_all_reduce(x: jnp.ndarray, axis: str, cfg,
             x, axis, cfg, mesh_axes=mesh_axes or compat.mesh_axis_names())
     return emulate.fused_all_reduce_emulated(x, axis, cfg, groups=groups,
                                              interpret=not on_tpu)
+
+
+# --------------------------------------------------------------------------
+# fused quantized All2All (CommConfig.scheme == "fused", MoE dispatch)
+# --------------------------------------------------------------------------
+
+def fused_all_to_all(x: jnp.ndarray, axis: str, cfg,
+                     groups=None,
+                     mesh_axes: Sequence[str] | None = None) -> jnp.ndarray:
+    """Fused-kernel A2A on a (tp, ..., d) block tensor (inside shard_map).
+
+    TPU: the real RDMA kernel (``repro.kernels.rdma_all2all``) —
+    quantize + pack + one ``make_async_remote_copy`` chunk per
+    destination rank + dequant, a single Pallas kernel. Elsewhere (and
+    for ``tp == 1`` or ``axis_index_groups``, which the RDMA addressing
+    doesn't cover): the lockstep emulation (``repro.kernels.emulate``)
+    running the same tile bodies with the push emulated by
+    ``lax.all_to_all``. ``d`` must be a group multiple (the collectives
+    layer pads and unpads around this call).
+    """
+    from repro.kernels import emulate
+    on_tpu = _backend() == "tpu"
+    if on_tpu and groups is None and compat.axis_size(axis) > 1:
+        from repro.kernels import rdma_all2all
+        return rdma_all2all.fused_all_to_all_rdma(
+            x, axis, cfg, mesh_axes=mesh_axes or compat.mesh_axis_names())
+    return emulate.fused_all_to_all_emulated(x, axis, cfg, groups=groups,
+                                             interpret=not on_tpu)

@@ -42,9 +42,10 @@ def main(argv=None):
                     choices=("auto", "ref", "pallas"),
                     help="wire codec backend for every comm site")
     ap.add_argument("--comm-scheme", default=None, choices=SCHEMES,
-                    help="override the AllReduce schedule at every "
-                         "enabled site (e.g. 'fused' for the Pallas "
-                         "RDMA two-step kernels)")
+                    help="override the collective schedule at every "
+                         "enabled site: AllReduce sites and the MoE "
+                         "dispatch A2A (e.g. 'fused' for the Pallas "
+                         "RDMA kernels, 'nccl' for the exact baseline)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

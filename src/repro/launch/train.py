@@ -51,9 +51,10 @@ def main(argv=None):
                     choices=("auto", "ref", "pallas"),
                     help="wire codec backend for every comm site")
     ap.add_argument("--comm-scheme", default=None, choices=SCHEMES,
-                    help="override the AllReduce schedule at every "
-                         "enabled site (e.g. 'fused' for the Pallas "
-                         "RDMA two-step kernels)")
+                    help="override the collective schedule at every "
+                         "enabled site: AllReduce sites and the MoE "
+                         "dispatch A2A (e.g. 'fused' for the Pallas "
+                         "RDMA kernels, 'nccl' for the exact baseline)")
     ap.add_argument("--n-micro", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", default=None)

@@ -7,6 +7,17 @@ TP-sharded ``etp`` ways. Token routing is capacity-based sort-free
 with the paper's wire codec (Table 2/8/10 site), the combine path stays
 BF16 (paper-faithful, following DeepSeek-V3), and the within-expert
 partial sums use the quantized TP AllReduce when ``etp > 1``.
+
+With ``policy.a2a.scheme == "fused"`` (``with_scheme(policy, "fused")``
+/ the launch CLIs' ``--comm-scheme fused``) the dispatch rides the
+fused A2A path instead of codec around ``lax.all_to_all``: the
+(ep, e_loc*cap, d) dispatch buffer maps onto (tp, m, d) per-peer
+blocks. On TPU with the A2A spanning the whole model axis that is the
+single-kernel RDMA push (``repro.kernels.rdma_all2all``); when the
+dispatch uses ``axis_index_groups`` (``ep < tp`` or ``etp > 1``, the
+RDMA addressing doesn't cover subgroups) it is the fused kernel bodies
+with an XLA hop (``repro.kernels.emulate``). Either way bit-identical
+to the XLA path (tests/_multidev_script.py ``fused_a2a``).
 """
 from __future__ import annotations
 

@@ -37,6 +37,10 @@ def test_quantized_a2a_semantics():
     _run("a2a")
 
 
+def test_fused_a2a_lockstep_vs_xla():
+    _run("fused_a2a")
+
+
 def test_train_step_multiaxis_two_policies():
     _run("train_two_policies")
 
