@@ -16,6 +16,16 @@ every other bench.
 XLA pins the device count at first jax init, so the measurement runs in
 a subprocess with ``--xla_force_host_platform_device_count=8`` (same
 pattern as tests/test_distributed.py).
+
+Per (size) batch, every scheme is measured ROUND-ROBIN (interleaved
+reps, best-of per scheme) so scheme-vs-scheme comparisons share the
+same ambient load — this container's two cores are shared and medians
+of back-to-back blocks drift by 2x otherwise.
+
+``--check`` compares a fresh run against the committed
+``results/collectives.json`` and exits non-zero on >25% regressions
+(with an absolute floor so sub-millisecond rows don't trip on
+scheduler jitter); the CI smoke-bench lane runs exactly this.
 """
 from __future__ import annotations
 
@@ -31,11 +41,13 @@ BITS = (8, 4)
 
 
 def _worker(fast: bool):
+    import time
+
     import jax
     import jax.numpy as jnp
+    import numpy as np
     from jax.sharding import PartitionSpec as P
 
-    from benchmarks.common import timeit
     from repro import compat
     from repro.core import (compressed_psum, default_comm_config,
                             dispatch_all_to_all)
@@ -46,8 +58,25 @@ def _worker(fast: bool):
     mesh = make_test_mesh(data=1, model=4, pod=2)
     dev = 8
     a2a_tp = 4                                # the "model" axis size
+    reps, warm = 11, 3
 
-    def bench_one(cfg, axes, n, label, bits):
+    def interleaved(cases):
+        """Measure a batch of (label, fn, x) ROUND-ROBIN: every rep of
+        every scheme sees the same ambient load, so scheme-vs-scheme
+        comparisons don't depend on when in the run the machine was
+        busy. Best-of-reps per scheme (see benchmarks.common.timeit)."""
+        for _, fn, x in cases:
+            for _ in range(warm):
+                fn(x).block_until_ready()
+        ts = {label: [] for label, _, _ in cases}
+        for _ in range(reps):
+            for label, fn, x in cases:
+                t0 = time.perf_counter()
+                fn(x).block_until_ready()
+                ts[label].append((time.perf_counter() - t0) * 1e6)
+        return {label: float(np.min(v)) for label, v in ts.items()}
+
+    def ar_case(cfg, axes, n):
         @functools.partial(compat.shard_map, mesh=mesh,
                            in_specs=P(("pod", "data", "model")),
                            out_specs=P(("pod", "data", "model")),
@@ -56,14 +85,9 @@ def _worker(fast: bool):
             return compressed_psum(xs[0], axes, cfg)[None]
 
         x = jax.random.normal(jax.random.PRNGKey(0), (dev, n), jnp.float32)
-        us = timeit(jax.jit(f), x, reps=5, warmup=2)
-        wire = (cfg.wire_bytes(n) if cfg.enabled and cfg.scheme != "nccl"
-                else 4 * n)
-        rows.append({"scheme": label, "bits": bits, "n": n,
-                     "wire_bytes_per_rank": wire,
-                     "value": round(us, 1), "unit": "us"})
+        return jax.jit(f), x
 
-    def bench_a2a(cfg, n, label, bits):
+    def a2a_case(cfg, n):
         # MoE-dispatch shape: tp per-peer blocks of n/tp values, d=512
         d = 512
         m = n // (a2a_tp * d)
@@ -77,28 +101,36 @@ def _worker(fast: bool):
 
         x = jax.random.normal(jax.random.PRNGKey(1),
                               (dev, a2a_tp, m, d), jnp.float32)
-        us = timeit(jax.jit(f), x, reps=5, warmup=2)
-        wire = (a2a_tp * m * cfg.wire_bytes(d)
-                if cfg.enabled and cfg.scheme != "nccl"
-                else 4 * n)
-        rows.append({"scheme": label, "bits": bits, "n": n,
-                     "wire_bytes_per_rank": wire,
-                     "value": round(us, 1), "unit": "us"})
+        return jax.jit(f), x
 
     for n in sizes:
-        baseline = default_comm_config(8, scheme="nccl")
-        bench_one(baseline, ("model", "pod"), n, "nccl", 32)
+        d = 512
+        cases, meta = [], {}
+
+        def add(label, bits, cfg, fn, x, wire):
+            cases.append((label, fn, x))
+            meta[label] = (bits, wire)
+
+        cfg = default_comm_config(8, scheme="nccl")
+        add("nccl", 32, cfg, *ar_case(cfg, ("model", "pod"), n), 4 * n)
         for bits in BITS:
             for scheme in ("two_step", "fused", "hierarchical", "hier_pp"):
                 cfg = default_comm_config(bits, scheme=scheme)
-                bench_one(cfg, ("model", "pod"), n, scheme, bits)
-        # the MoE dispatch A2A: exact baseline, XLA codec path, fused
-        bench_a2a(default_comm_config(8, scheme="nccl"), n,
-                  "a2a_nccl", 32)
+                add(f"{scheme}@{bits}", bits, cfg,
+                    *ar_case(cfg, ("model", "pod"), n), cfg.wire_bytes(n))
+        cfg = default_comm_config(8, scheme="nccl")
+        add("a2a_nccl", 32, cfg, *a2a_case(cfg, n), 4 * n)
         for bits in BITS:
             for scheme in ("two_step", "fused"):
                 cfg = default_comm_config(bits, scheme=scheme)
-                bench_a2a(cfg, n, f"a2a_{scheme}", bits)
+                add(f"a2a_{scheme}@{bits}", bits, cfg, *a2a_case(cfg, n),
+                    a2a_tp * (n // (a2a_tp * d)) * cfg.wire_bytes(d))
+
+        us = interleaved(cases)
+        for label, (bits, wire) in meta.items():
+            rows.append({"scheme": label.split("@")[0], "bits": bits,
+                         "n": n, "wire_bytes_per_rank": wire,
+                         "value": round(us[label], 1), "unit": "us"})
     print(json.dumps(rows))
 
 
@@ -122,15 +154,100 @@ def run(fast: bool = False):
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
+def _merged_with_committed(rows):
+    """Fresh rows merged over the committed baseline by (scheme, bits,
+    n), so saving a run at different sizes never drops the baseline keys
+    the CI regression guard checks against."""
+    merged = {}
+    if os.path.exists(COMMITTED):
+        try:
+            with open(COMMITTED) as f:
+                merged = {_row_key(r): r for r in json.load(f)}
+        except (ValueError, KeyError):
+            merged = {}
+    for r in rows:
+        merged[_row_key(r)] = r
+    return list(merged.values())
+
+
 def bench_collectives(fast: bool = False):
-    return run(fast)
+    """run.py entry point (its generic save() writes what we return)."""
+    return _merged_with_committed(run(fast))
+
+
+# ---------------------------------------------------------------------------
+# regression guard: fresh numbers vs the committed results
+# ---------------------------------------------------------------------------
+
+# >25% slower than the committed number fails the check. CPU wall noise
+# on shared cores is real, so an absolute floor keeps sub-millisecond
+# rows from tripping the guard on scheduler jitter alone.
+CHECK_TOL = 0.25
+CHECK_ABS_FLOOR_US = 1500.0
+
+COMMITTED = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "results", "collectives.json")
+
+
+def _row_key(r):
+    return (r["scheme"], r["bits"], r["n"])
+
+
+def check_regressions(fresh, committed_path: str = COMMITTED,
+                      tol: float = CHECK_TOL):
+    """Compare fresh rows to the committed baseline; return regressions.
+
+    Rows are matched on (scheme, bits, n); a fresh row regresses when it
+    is more than ``tol`` slower than the committed value AND the excess
+    clears the absolute noise floor. New rows never fail — but if NO
+    fresh row matches any committed key the guard has rotted (e.g. the
+    baseline file was regenerated with disjoint sizes) and we raise
+    instead of waving a vacuous green flag.
+    """
+    with open(committed_path) as f:
+        committed = {_row_key(r): r["value"] for r in json.load(f)}
+    regressions = []
+    matched = 0
+    for r in fresh:
+        old = committed.get(_row_key(r))
+        if old is None:
+            continue
+        matched += 1
+        new = r["value"]
+        if new > old * (1 + tol) and new - old > CHECK_ABS_FLOOR_US:
+            regressions.append((_row_key(r), old, new))
+    if fresh and matched == 0:
+        raise RuntimeError(
+            f"bench guard matched 0 of {len(fresh)} fresh rows against "
+            f"{committed_path} — the baseline keys have rotted; "
+            "regenerate the committed file at the checked sizes")
+    return regressions
+
+
+
+
+def main(argv):
+    fast = "--fast" in argv
+    rows = run(fast)
+    from benchmarks.common import emit
+    if "--check" in argv:
+        regs = check_regressions(rows)
+        for key, old, new in regs:
+            print(f"REGRESSION {key}: {old} us -> {new} us "
+                  f"(+{(new / old - 1) * 100:.0f}%)")
+        if regs:
+            return 1
+        print(f"check ok: {len(rows)} rows within "
+              f"{CHECK_TOL * 100:.0f}% of committed baselines")
+    else:
+        from benchmarks.common import save
+        save("collectives", _merged_with_committed(rows))
+    emit("collectives", rows)
+    return 0
 
 
 if __name__ == "__main__":
     if "--worker" in sys.argv:
         _worker("--fast" in sys.argv)
     else:
-        from benchmarks.common import emit, save
-        rows = run("--fast" in sys.argv)
-        save("collectives", rows)
-        emit("collectives", rows)
+        sys.exit(main(sys.argv[1:]))

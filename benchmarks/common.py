@@ -37,8 +37,15 @@ def emit(name: str, rows: List[Dict]) -> None:
         print(f"{name},{key},{r.get('value')}")
 
 
-def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
-    """Median wall us per call (jit'd callables; CPU)."""
+def timeit(fn, *args, reps: int = 5, warmup: int = 2,
+           best: bool = False) -> float:
+    """Median (or best-of) wall us per call (jit'd callables; CPU).
+
+    ``best=True`` reports the minimum: on this container the benches
+    share two throttled cores with their harness, and ambient load
+    inflates medians arbitrarily while the minimum tracks the actual
+    cost of the op.
+    """
     for _ in range(warmup):
         out = fn(*args)
     _block(out)
@@ -48,7 +55,7 @@ def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
         out = fn(*args)
         _block(out)
         ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+    return float(np.min(ts) if best else np.median(ts))
 
 
 def _block(out):

@@ -4,16 +4,23 @@ Irregular widths decompose into regular units — e.g. INT5 = a 4-bit
 regular part (packed 2-per-byte) plus a standalone 1-bit plane (packed
 8-per-byte). Regular parts of the same chunk are stored together, extra
 bit planes are stored separately, exactly as in the paper. The result is
-a single contiguous uint8 payload of exactly ``ceil(n*bits/8)`` bytes
-(for n a multiple of 8).
+a single contiguous uint8 payload of exactly ``sum(ceil(n*u/8))`` bytes.
 
-All functions are pure jnp and jit/shard_map-safe; the Pallas fast path
-lives in :mod:`repro.kernels.quant_pack`.
+The per-plane inner loop is the shared word-parallel implementation in
+:mod:`repro.core.wordpack` (uint32-lane shift/or trees — the same code
+the Pallas kernels run, so the backends cannot drift). Trailing lanes
+(``n`` not a multiple of ``8 // unit``) are zero-padded on pack and
+sliced off on unpack, so any ``n`` round-trips exactly
+(tests/test_codec.py property sweep over odd shapes).
+
+All functions are pure jnp and jit/shard_map-safe; the fused Pallas fast
+path lives in :mod:`repro.kernels.quant_pack`.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import wordpack
 from repro.core.comm_config import BIT_UNITS
 
 
@@ -29,56 +36,41 @@ def _unit_fields(codes: jnp.ndarray, bits: int):
 
 
 def pack_unit(vals: jnp.ndarray, unit: int) -> jnp.ndarray:
-    """Pack (..., n) sub-byte values of width `unit` into (..., n*unit/8)."""
-    if unit == 8:
-        return vals.astype(jnp.uint8)
-    per = 8 // unit
-    n = vals.shape[-1]
-    assert n % per == 0, f"n={n} not divisible by {per} for unit={unit}"
-    v = vals.reshape(*vals.shape[:-1], n // per, per).astype(jnp.uint32)
-    shifts = jnp.arange(per, dtype=jnp.uint32) * unit
-    packed = jnp.sum(v << shifts, axis=-1)
-    return packed.astype(jnp.uint8)
+    """Pack (..., n) sub-byte values of width `unit` into ceil(n*unit/8)
+    bytes (word-parallel; zero-padded tail for odd n)."""
+    return wordpack.pack_plane(vals, unit)
 
 
 def unpack_unit(packed: jnp.ndarray, unit: int, n: int) -> jnp.ndarray:
     """Inverse of :func:`pack_unit`; returns (..., n) uint8 values."""
-    if unit == 8:
-        return packed.astype(jnp.uint8)
-    per = 8 // unit
-    mask = jnp.uint8((1 << unit) - 1)
-    shifts = jnp.arange(per, dtype=jnp.uint8) * unit
-    vals = (packed[..., None] >> shifts) & mask
-    return vals.reshape(*packed.shape[:-1], packed.shape[-1] * per)[..., :n]
+    return wordpack.unpack_plane(packed, unit, n)
 
 
 def pack(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """Pack (..., n) codes (uint8, values < 2^bits) -> (..., n*bits/8) bytes.
+    """Pack (..., n) codes (uint8, values < 2^bits) -> packed_nbytes bytes.
 
     Layout: [regular-part bytes][next-unit bytes][extra-bit-plane bytes],
     i.e. all units of the chunk stored contiguously (paper's bit splitting).
     """
     assert codes.dtype == jnp.uint8
-    fields = _unit_fields(codes, bits)
-    planes = [pack_unit(f, u) for f, u in zip(fields, BIT_UNITS[bits])]
+    planes = [p for _, p in wordpack.pack_codes(codes, bits)]
     return jnp.concatenate(planes, axis=-1)
 
 
 def unpack(payload: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
-    """Inverse of :func:`pack`: (..., n*bits/8) bytes -> (..., n) codes."""
-    out = None
-    shift = 0
+    """Inverse of :func:`pack`: packed bytes -> (..., n) codes."""
+    offs = []
     off = 0
     for unit in BIT_UNITS[bits]:
-        nbytes = n * unit // 8
-        plane = payload[..., off:off + nbytes]
-        vals = unpack_unit(plane, unit, n).astype(jnp.uint8)
-        contrib = (vals.astype(jnp.uint32) << shift).astype(jnp.uint8)
-        out = contrib if out is None else out | contrib
-        shift += unit
-        off += nbytes
-    return out
+        offs.append(off)
+        off += wordpack.plane_nbytes(n, unit)
+    assert payload.shape[-1] == off, (payload.shape, off)
+
+    def read_plane(i, unit, nbytes):
+        return payload[..., offs[i]:offs[i] + nbytes]
+
+    return wordpack.unpack_codes(read_plane, bits, n)
 
 
 def packed_nbytes(n: int, bits: int) -> int:
-    return sum((n * u + 7) // 8 for u in BIT_UNITS[bits])
+    return sum(wordpack.plane_nbytes(n, u) for u in BIT_UNITS[bits])

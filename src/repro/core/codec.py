@@ -31,10 +31,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitsplit, scale_codec
+from repro.core import tilecodec
 from repro.core.comm_config import CommConfig
-from repro.core.quant import quantize, dequantize
-from repro.core.spike import SpikeQuant, spike_quantize, spike_dequantize
 
 
 def resolve_backend(cfg: CommConfig) -> str:
@@ -45,25 +43,7 @@ def resolve_backend(cfg: CommConfig) -> str:
     return backend
 
 
-def _to_bytes(x: jnp.ndarray) -> jnp.ndarray:
-    """Bitcast any fixed-width array to (..., k*itemsize) uint8."""
-    if x.dtype == jnp.uint8:
-        return x
-    if x.dtype == jnp.int8:
-        return jax.lax.bitcast_convert_type(x, jnp.uint8)
-    b = jax.lax.bitcast_convert_type(x, jnp.uint8)  # (..., itemsize)
-    return b.reshape(*x.shape[:-1], x.shape[-1] * b.shape[-1])
-
-
-def _from_bytes(buf: jnp.ndarray, dtype, inner: int) -> jnp.ndarray:
-    """Inverse of :func:`_to_bytes`: (..., inner*itemsize) -> (..., inner)."""
-    if dtype == jnp.uint8:
-        return buf
-    if dtype == jnp.int8:
-        return jax.lax.bitcast_convert_type(buf, jnp.int8)
-    itemsize = jnp.dtype(dtype).itemsize
-    b = buf.reshape(*buf.shape[:-1], inner, itemsize)
-    return jax.lax.bitcast_convert_type(b, dtype)
+_tile_kw = tilecodec.tile_kwargs
 
 
 def encode(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
@@ -111,88 +91,28 @@ def decode_pallas(buf: jnp.ndarray, cfg: CommConfig, n: int,
 # ---------------------------------------------------------------------------
 
 def encode_ref(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
-    """(..., n) float -> (..., cfg.wire_bytes(n)) uint8 (pure jnp)."""
+    """(..., n) float -> (..., cfg.wire_bytes(n)) uint8 (pure jnp).
+
+    Runs the exact shared tile body the Pallas/RDMA kernels run
+    (:mod:`repro.core.tilecodec`) on the lead-flattened tensor: one codec
+    implementation, zero backend drift, no concatenate assembly.
+    """
     n = x.shape[-1]
-    meta_dtype = jnp.dtype(cfg.meta_dtype)
-
-    if cfg.spike:
-        q = spike_quantize(x, cfg.bits, cfg.group, meta_dtype)
-        codes, scale, zero = q.codes, q.scale, q.zero
-        spike_vals, spike_idx = q.spike_vals, q.spike_idx
-    else:
-        codes, scale, zero = quantize(x, cfg.bits, cfg.group, meta_dtype)
-        spike_vals = spike_idx = None
-
-    flat_codes = codes.reshape(*codes.shape[:-2], n)
-    payload = bitsplit.pack(flat_codes, cfg.bits)
-
-    parts = [payload]
-    if cfg.scale_int:
-        parts.append(_to_bytes(scale_codec.encode_scale(scale, cfg.theta)))
-        parts.append(scale_codec.encode_signed(zero, cfg.theta))
-    else:
-        parts.append(_to_bytes(scale))
-        parts.append(_to_bytes(zero))
-    if cfg.spike:
-        g = spike_vals.shape[-2]
-        sv = spike_vals.reshape(*spike_vals.shape[:-2], g * 2)
-        si = spike_idx.reshape(*spike_idx.shape[:-2], g * 2)
-        parts.append(_to_bytes(sv))      # exact bf16 spikes (paper-faithful)
-        # Indices: BF16 baseline, INT8 with scale_int (paper Table 4).
-        if cfg.scale_int:
-            parts.append(_to_bytes(si))
-        else:
-            parts.append(_to_bytes(si.astype(meta_dtype)))
-    buf = jnp.concatenate(parts, axis=-1)
+    lead = x.shape[:-1]
+    buf = tilecodec.encode_tile(x.reshape(-1, n), **_tile_kw(cfg, n))
     assert buf.shape[-1] == cfg.wire_bytes(n), (
         f"wire mismatch: got {buf.shape[-1]}, want {cfg.wire_bytes(n)}")
-    return buf
+    return buf.reshape(*lead, buf.shape[-1])
 
 
 def decode_ref(buf: jnp.ndarray, cfg: CommConfig, n: int,
                out_dtype=jnp.float32) -> jnp.ndarray:
     """(..., wire_bytes(n)) uint8 -> (..., n) out_dtype (pure jnp)."""
-    meta_dtype = jnp.dtype(cfg.meta_dtype)
-    groups = n // cfg.group
     lead = buf.shape[:-1]
-
-    off = 0
-    nbytes = cfg.payload_bytes(n)
-    payload = buf[..., off:off + nbytes]
-    off += nbytes
-
-    codes = bitsplit.unpack(payload, cfg.bits, n)
-    codes = codes.reshape(*lead, groups, cfg.group)
-
-    meta_size = 1 if cfg.scale_int else jnp.dtype(meta_dtype).itemsize
-    sb = buf[..., off:off + groups * meta_size]; off += groups * meta_size
-    zb = buf[..., off:off + groups * meta_size]; off += groups * meta_size
-    if cfg.scale_int:
-        scale = scale_codec.decode_scale(_from_bytes(sb, jnp.int8, groups),
-                                         cfg.theta)
-        zero = scale_codec.decode_signed(zb, cfg.theta)
-    else:
-        scale = _from_bytes(sb, meta_dtype, groups)
-        zero = _from_bytes(zb, meta_dtype, groups)
-
-    if cfg.spike:
-        svn = groups * 2 * jnp.dtype(meta_dtype).itemsize
-        sv = _from_bytes(buf[..., off:off + svn], meta_dtype, groups * 2)
-        off += svn
-        if cfg.scale_int:
-            si = _from_bytes(buf[..., off:off + groups * 2], jnp.int8,
-                             groups * 2)
-            off += groups * 2
-        else:
-            sin = groups * 2 * jnp.dtype(meta_dtype).itemsize
-            si = _from_bytes(buf[..., off:off + sin], meta_dtype,
-                             groups * 2).astype(jnp.int8)
-            off += sin
-        q = SpikeQuant(codes, scale, zero,
-                       sv.reshape(*lead, groups, 2),
-                       si.reshape(*lead, groups, 2))
-        return spike_dequantize(q, out_dtype)
-    return dequantize(codes, scale, zero, out_dtype)
+    out = tilecodec.decode_tile(buf.reshape(-1, buf.shape[-1]),
+                                out_dtype=jnp.dtype(out_dtype),
+                                **_tile_kw(cfg, n))
+    return out.reshape(*lead, n)
 
 
 def qdq_wire(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:

@@ -74,11 +74,15 @@ def _gsize(axis, groups):
 
 def quantized_all_reduce(x: jnp.ndarray, axis: str,
                          cfg: CommConfig, groups=None) -> jnp.ndarray:
-    """Flash two-step AR on a flat (n,) vector over one mesh axis.
+    """Flash two-step AR on (..., n) vectors over one mesh axis.
 
     Phase 1: chunk + quantize + all_to_all + dequant + local reduce.
     Phase 2: re-quantize partial sum + all_gather + dequant.
     Matches the paper's fused kernel semantics (QDQ around each hop).
+
+    Leading dims are batched through one schedule (one collective per
+    phase) — the pipelined hierarchical scheme feeds its microchunks
+    through here as a single (chunks, n/chunks) batch.
 
     With ``cfg.scheme == "fused"`` the same two-step schedule runs as
     actual fused kernels: quantize + pack + RDMA push + dequant + reduce
@@ -87,27 +91,40 @@ def quantized_all_reduce(x: jnp.ndarray, axis: str,
     """
     if cfg.scheme == "fused":
         from repro.kernels import ops   # deferred: keeps core import-light
+        if x.ndim > 1:
+            # the fused kernels take one flat per-device vector; a batch
+            # (e.g. a fused outer hop under the batched hierarchical
+            # schedules) is concatenated — sums are elementwise so the
+            # result is the same AR, the wire just re-chunks the whole
+            # batch instead of each row (group alignment is preserved:
+            # every row length is a tp*group multiple)
+            out = ops.fused_all_reduce(x.reshape(-1), axis, cfg,
+                                       groups=groups)
+            return out.reshape(x.shape).astype(x.dtype)
         return ops.fused_all_reduce(x, axis, cfg, groups=groups)
     tp = _gsize(axis, groups)
     n = x.shape[-1]
+    lead = x.shape[:-1]
+    b = len(lead)                                        # tp-axis position
     assert n % tp == 0 and (n // tp) % cfg.group == 0, (n, tp, cfg.group)
-    xc = x.reshape(tp, n // tp)
-    wire = codec.encode(xc, cfg)                         # (tp, w)
-    recv = lax.all_to_all(wire, axis, 0, 0, tiled=True,
+    xc = x.reshape(*lead, tp, n // tp)
+    wire = codec.encode(xc, cfg)                         # (..., tp, w)
+    recv = lax.all_to_all(wire, axis, b, b, tiled=True,
                           axis_index_groups=groups)      # rows from peers
-    parts = codec.decode(recv, cfg, n // tp)             # (tp, n/tp) f32
-    partial = jnp.sum(parts, axis=0)                     # my chunk, summed
-    wire2 = codec.encode(partial, cfg)                   # (w,)
-    allw = lax.all_gather(wire2, axis, axis=0,
-                          axis_index_groups=groups)      # (tp, w)
-    full = codec.decode(allw, cfg, n // tp)              # (tp, n/tp)
-    return full.reshape(n).astype(x.dtype)
+    parts = codec.decode(recv, cfg, n // tp)             # (..., tp, n/tp)
+    partial = jnp.sum(parts, axis=b)                     # my chunk, summed
+    wire2 = codec.encode(partial, cfg)                   # (..., w)
+    allw = lax.all_gather(wire2, axis, axis=b,
+                          axis_index_groups=groups)      # (..., tp, w)
+    full = codec.decode(allw, cfg, n // tp)              # (..., tp, n/tp)
+    return full.reshape(*lead, n).astype(x.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def quantized_reduce_scatter(x: jnp.ndarray, axis: str,
                              cfg: CommConfig) -> jnp.ndarray:
-    """Quantized RS: (n,) -> (n/tp,) summed chunk (phase 1 of two-step).
+    """Quantized RS: (..., n) -> (..., n/tp) summed chunk (phase 1 of
+    two-step); leading dims batch through one collective.
 
     Transpose (bwd) is the exact all_gather of cotangents — the true
     transpose of a tiled reduce-scatter — so jax.grad through it under
@@ -115,12 +132,14 @@ def quantized_reduce_scatter(x: jnp.ndarray, axis: str,
     """
     tp = compat.axis_size(axis)
     n = x.shape[-1]
+    lead = x.shape[:-1]
+    b = len(lead)
     assert n % tp == 0 and (n // tp) % cfg.group == 0
-    xc = x.reshape(tp, n // tp)
+    xc = x.reshape(*lead, tp, n // tp)
     wire = codec.encode(xc, cfg)
-    recv = lax.all_to_all(wire, axis, 0, 0, tiled=True)
+    recv = lax.all_to_all(wire, axis, b, b, tiled=True)
     parts = codec.decode(recv, cfg, n // tp)
-    return jnp.sum(parts, axis=0).astype(x.dtype)
+    return jnp.sum(parts, axis=b).astype(x.dtype)
 
 
 def _qrs_fwd(x, axis, cfg):
@@ -129,7 +148,7 @@ def _qrs_fwd(x, axis, cfg):
 
 def _qrs_bwd(axis, cfg, res, g):
     del res
-    return (lax.all_gather(g, axis, axis=0, tiled=True),)
+    return (lax.all_gather(g, axis, axis=g.ndim - 1, tiled=True),)
 
 
 quantized_reduce_scatter.defvjp(_qrs_fwd, _qrs_bwd)
@@ -138,7 +157,8 @@ quantized_reduce_scatter.defvjp(_qrs_fwd, _qrs_bwd)
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def quantized_all_gather(x: jnp.ndarray, axis: str,
                          cfg: CommConfig) -> jnp.ndarray:
-    """Quantized AG: (k,) -> (tp*k,). ZeRO++-style weight gather.
+    """Quantized AG: (..., k) -> (..., tp*k). ZeRO++-style weight gather;
+    leading dims batch through one collective.
 
     Transpose (bwd) is the exact psum_scatter of cotangents — the true
     transpose of a tiled all_gather — matching ``fsdp_all_gather``'s
@@ -146,11 +166,13 @@ def quantized_all_gather(x: jnp.ndarray, axis: str,
     forward (tests/test_collective_properties.py).
     """
     n = x.shape[-1]
+    lead = x.shape[:-1]
+    b = len(lead)
     assert n % cfg.group == 0
     wire = codec.encode(x, cfg)
-    allw = lax.all_gather(wire, axis, axis=0)            # (tp, w)
-    full = codec.decode(allw, cfg, n)
-    return full.reshape(-1).astype(x.dtype)
+    allw = lax.all_gather(wire, axis, axis=b)            # (..., tp, w)
+    full = codec.decode(allw, cfg, n)                    # (..., tp, k)
+    return full.reshape(*lead, -1).astype(x.dtype)
 
 
 def _qag_fwd(x, axis, cfg):
@@ -159,7 +181,8 @@ def _qag_fwd(x, axis, cfg):
 
 def _qag_bwd(axis, cfg, res, g):
     del res
-    return (lax.psum_scatter(g, axis, scatter_dimension=0, tiled=True),)
+    return (lax.psum_scatter(g, axis, scatter_dimension=g.ndim - 1,
+                             tiled=True),)
 
 
 quantized_all_gather.defvjp(_qag_fwd, _qag_bwd)
@@ -218,24 +241,26 @@ def hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str, outer_axis: str,
     3. partial AllGather inside the fast domain.
 
     ``outer_cfg`` lets the slow hop use a more aggressive width than the
-    fast hop (beyond-paper knob; defaults to ``cfg``).
+    fast hop (beyond-paper knob; defaults to ``cfg``). Leading dims are
+    batched through one schedule (how ``hier_pp`` rides this function).
     """
     outer_cfg = outer_cfg or cfg
     inner = compat.axis_size(inner_axis)
     n = x.shape[-1]
+    b = x.ndim - 1
     assert n % inner == 0 and (n // inner) % cfg.group == 0
-    chunk = quantized_reduce_scatter(x, inner_axis, cfg)     # (n/inner,)
+    chunk = quantized_reduce_scatter(x, inner_axis, cfg)     # (..., n/inner)
     outer = compat.axis_size(outer_axis)
     if outer > 1:
         if (n // inner) % (outer * outer_cfg.group) == 0:
             chunk = quantized_all_reduce(chunk, outer_axis, outer_cfg)
         else:  # small remainder chunks: quantized AG + local sum
             wire = codec.encode(chunk, outer_cfg)
-            allw = lax.all_gather(wire, outer_axis, axis=0)
+            allw = lax.all_gather(wire, outer_axis, axis=b)
             chunk = jnp.sum(
-                codec.decode(allw, outer_cfg, chunk.shape[-1]), axis=0
+                codec.decode(allw, outer_cfg, chunk.shape[-1]), axis=b
             ).astype(x.dtype)
-    full = quantized_all_gather(chunk, inner_axis, cfg)      # (n,)
+    full = quantized_all_gather(chunk, inner_axis, cfg)      # (..., n)
     return full.astype(x.dtype)
 
 
@@ -245,11 +270,16 @@ def pipelined_hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str,
                                       ) -> jnp.ndarray:
     """Microchunked hierarchical AR (paper Fig. 8).
 
-    The vector is cut into ``cfg.pipeline_chunks`` microchunks whose
-    three-stage schedules are *independent*; on real hardware the XLA/ICI
-    scheduler overlaps chunk i's cross-pod hop with chunk i+1's intra-pod
-    ReduceScatter, hiding the slow-bridge latency (paper: up to 20%).
-    Semantically identical to the serial version.
+    The vector is cut into ``cfg.pipeline_chunks`` microchunks and the
+    whole batch runs through ONE three-stage schedule as a
+    ``(chunks, n/chunks)`` tensor: one all_to_all / all_gather per stage
+    carries every microchunk, instead of the old Python loop that traced
+    ``chunks`` copies of the schedule (per-call dispatch overhead and a
+    ``chunks``-times bigger HLO for zero numerical difference — each
+    microchunk's quantization groups and reduce order are unchanged, so
+    the result is bit-identical to the serial loop). On real hardware the
+    XLA/ICI scheduler can still overlap the batched stages' cross-pod hop
+    with the intra-pod stages of the next wave (paper: up to 20%).
     """
     chunks = max(1, cfg.pipeline_chunks)
     inner = compat.axis_size(inner_axis)
@@ -257,10 +287,9 @@ def pipelined_hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str,
     mult = inner * cfg.group * chunks
     assert n % mult == 0, (n, mult)
     xs = x.reshape(chunks, n // chunks)
-    outs = [hierarchical_all_reduce(xs[c], inner_axis, outer_axis, cfg,
-                                    outer_cfg)
-            for c in range(chunks)]
-    return jnp.stack(outs).reshape(n)
+    out = hierarchical_all_reduce(xs, inner_axis, outer_axis, cfg,
+                                  outer_cfg)
+    return out.reshape(n)
 
 
 # --------------------------------------------------------------------------

@@ -10,7 +10,8 @@ hierarchical / plain NCCL-equivalent psum).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import NamedTuple, Optional, Tuple
 
 # Bit-splitting decomposition of every supported width into regular units.
 # 4- and 2-bit are the "regular parts"; 1/2-bit remainders are the
@@ -37,6 +38,71 @@ SCHEMES = ("nccl", "two_step", "fused", "hierarchical", "hier_pp")
 # Wire-codec backends: "ref" is the pure-jnp path, "pallas" the fused
 # kernel path (interpret mode off-TPU), "auto" picks pallas on TPU.
 BACKENDS = ("ref", "pallas", "auto")
+
+
+class Section(NamedTuple):
+    """One contiguous byte span of the wire buffer."""
+    offset: int
+    nbytes: int
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.nbytes
+
+
+class WireLayout(NamedTuple):
+    """Static byte-offset table of the wire format for ``n`` numbers.
+
+    The single source of truth for where every section of the on-link
+    buffer lives::
+
+        [plane 0 | plane 1 | ... | scale | zero | spike vals | spike idx]
+
+    Used by the reference codec, the fused Pallas wire kernels (which
+    write each section straight into its slice of the output ref — no
+    ``jnp.concatenate`` assembly) and the RDMA kernels' send/receive
+    buffer addressing. ``spike_vals`` / ``spike_idx`` are ``None`` when
+    spike reserving is off.
+    """
+    n: int
+    planes: Tuple[Tuple[int, Section], ...]   # ((unit, span), ...)
+    scale: Section
+    zero: Section
+    spike_vals: Optional[Section]
+    spike_idx: Optional[Section]
+    total: int
+
+
+_META_ITEMSIZE = 2      # BF16/FP16 wire metadata (paper baseline)
+
+
+@functools.lru_cache(maxsize=None)
+def _wire_layout(n: int, bits: int, group: int, spike: bool,
+                 scale_int: bool) -> WireLayout:
+    assert n % group == 0, (n, group)
+    g = n // group
+    off = 0
+    planes = []
+    for unit in BIT_UNITS[bits]:
+        nbytes = (n * unit + 7) // 8
+        planes.append((unit, Section(off, nbytes)))
+        off += nbytes
+    meta = 1 if scale_int else _META_ITEMSIZE
+    scale = Section(off, g * meta)
+    off = scale.end
+    zero = Section(off, g * meta)
+    off = zero.end
+    spike_vals = spike_idx = None
+    if spike:
+        # 2 spikes per group: values always meta-exact (paper Fig. 5c),
+        # indices int8 with scale_int, meta-width otherwise (Table 4).
+        spike_vals = Section(off, 2 * g * _META_ITEMSIZE)
+        off = spike_vals.end
+        spike_idx = Section(off, 2 * g * (1 if scale_int
+                                          else _META_ITEMSIZE))
+        off = spike_idx.end
+    return WireLayout(n, tuple(planes), scale, zero, spike_vals,
+                      spike_idx, off)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,32 +143,33 @@ class CommConfig:
 
     # ----- wire-size accounting (exact; used by Table 4/5 benches too) ---
 
+    def wire_layout(self, n: int) -> WireLayout:
+        """Static byte-offset table of the wire format for ``n`` numbers.
+
+        Cached per (n, bits, group, spike, scale_int); encode, decode and
+        the RDMA kernels all address the buffer through this table.
+        """
+        return _wire_layout(n, self.bits, self.group, self.spike,
+                            self.scale_int)
+
     def payload_bytes(self, n: int) -> int:
         """Packed quantized-code bytes for n numbers (bit splitting)."""
-        assert n % self.group == 0
-        total = 0
-        for unit in BIT_UNITS[self.bits]:
-            total += (n * unit + 7) // 8
-        return total
+        layout = self.wire_layout(n)
+        return sum(span.nbytes for _, span in layout.planes)
 
     def meta_bytes(self, n: int) -> int:
-        """Scale/zero (+ spikes & indices) bytes for n numbers."""
-        groups = n // self.group
-        if self.scale_int:
-            scale_zero = 2 * groups          # int8 scale + int8 zero
-        else:
-            scale_zero = 2 * 2 * groups      # bf16 scale + bf16 zero
-        spikes = 0
-        if self.spike:
-            # 2 spike values per group (always BF16-exact, paper Fig. 5c)
-            # + 2 indices per group (BF16 baseline; INT8 with scale_int —
-            # paper Table 4: 2560 -> 2048 bytes for 4096 numbers).
-            spikes = 2 * 2 * groups          # bf16 values
-            spikes += 2 * groups * (1 if self.scale_int else 2)
-        return scale_zero + spikes
+        """Scale/zero (+ spikes & indices) bytes for n numbers.
+
+        int8 scale+zero with ``scale_int`` (Eq. 1), BF16 otherwise; spike
+        values stay BF16-exact and their indices are INT8 under
+        ``scale_int`` (paper Table 4: 2560 -> 2048 bytes for 4096
+        numbers).
+        """
+        layout = self.wire_layout(n)
+        return layout.total - self.payload_bytes(n)
 
     def wire_bytes(self, n: int) -> int:
-        return self.payload_bytes(n) + self.meta_bytes(n)
+        return self.wire_layout(n).total
 
     def compression_ratio(self, n: int) -> float:
         return (2.0 * n) / self.wire_bytes(n)   # vs BF16

@@ -10,24 +10,125 @@ sign-magnitude variant: bit 7 = sign, bits 0..6 = biased theta-scaled
 log2 magnitude (covers magnitudes 2^(-64/theta) .. 2^(63/theta), i.e.
 ~[0.012, 79] at theta=10 — ample for activation/gradient statistics; the
 ends clamp).
+
+**Transcendental-free.** The hot path contains no log2/exp2: TPU Pallas
+kernels pay dearly for transcendentals, and the codec runs inside every
+fused collective. Instead the codec is pure exponent arithmetic on the
+float32 bit pattern (integer/VPU ops only):
+
+* encode — ``floor(log2(s) * theta) = e*theta + r`` where ``e`` is the
+  unbiased exponent (``bits >> 23``) and ``r`` counts how many of the
+  ``theta-1`` mantissa thresholds ``mant(2^(k/theta))`` the mantissa
+  field reaches. The thresholds are computed once per theta with exact
+  integer arithmetic (Python bignums: ``(2^23+m)^theta >= 2^(23*theta+k)``),
+  so the result equals the exact real-valued floor for every float32
+  input — verified bit-for-bit against a float64 log2 reference over all
+  codes and a dense float grid (tests/test_scale_codec_exact.py).
+* decode — ``2^(code/theta) = 2^q * T[r]`` with ``q, r = divmod(code,
+  theta)``: ``2^q`` is bit-assembled into the exponent field and ``T`` is
+  the theta-entry correctly-rounded ``2^(r/theta)`` table; the final
+  multiply is an exact power-of-two scaling, so the product is the
+  correctly-rounded float32 of ``2^(code/theta)``.
+
+Non-finite inputs (diverged grads) take the clamp path deterministically:
+NaN/inf carry biased exponent 255, so they encode to the top code on
+every backend (the previous float path's ``int8(NaN)`` cast was
+backend-defined).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 _LOG_BIAS = 64
 _MAG_MIN = 1e-20
+_MANT_BITS = 23
+_MANT_ONE = 1 << _MANT_BITS
+
+
+# ---------------------------------------------------------------------------
+# exact per-theta tables (Python-int arithmetic, cached; no float error)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _mant_thresholds(theta: int):
+    """Smallest mantissa fields m_k with 1.m_k >= 2^(k/theta), k=1..theta-1.
+
+    ``floor(log2(1.m) * theta)`` is then the count of thresholds the
+    mantissa reaches. Exact: 2^(k/theta) is irrational for 0 < k < theta,
+    so the bignum comparison has no ties.
+    """
+    assert theta >= 2, f"theta={theta} (integer-log codec needs theta >= 2)"
+    out = []
+    for k in range(1, theta):
+        m = int((2.0 ** (k / theta) - 1.0) * _MANT_ONE) - 2  # close guess
+        m = max(m, 0)
+        target = 1 << (_MANT_BITS * theta + k)
+        while (_MANT_ONE + m) ** theta < target:
+            m += 1
+        out.append(m)
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=None)
+def _frac_table(theta: int):
+    """Correctly-rounded float32 values of 2^(r/theta), r = 0..theta-1."""
+    vals = [1.0]
+    thresholds = _mant_thresholds(theta)
+    for r in range(1, theta):
+        m = thresholds[r - 1] - 1          # floor mantissa of 2^(r/theta)
+        # round to nearest: is 2^(r/theta) above the half-ulp midpoint?
+        mid = (1 << (_MANT_BITS + 1)) + 2 * m + 1
+        if (1 << ((_MANT_BITS + 1) * theta + r)) > mid ** theta:
+            m += 1
+        vals.append(2.0 if m == _MANT_ONE else (_MANT_ONE + m) / _MANT_ONE)
+    return tuple(vals)
+
+
+# ---------------------------------------------------------------------------
+# jnp hot path (integer / select ops only)
+# ---------------------------------------------------------------------------
+
+def _floor_log2_theta(s: jnp.ndarray, theta: int) -> jnp.ndarray:
+    """floor(log2(s) * theta) as int32, for positive normal float32 s.
+
+    Exact for every such s (exponent + threshold count); NaN/inf map to
+    the e=128 top band and clamp downstream.
+    """
+    u = jax.lax.bitcast_convert_type(s.astype(jnp.float32), jnp.uint32)
+    e = (u >> _MANT_BITS).astype(jnp.int32) - 127
+    mant = u & jnp.uint32(_MANT_ONE - 1)
+    r = jnp.zeros(s.shape, jnp.int32)
+    for m_k in _mant_thresholds(theta):
+        r = r + (mant >= jnp.uint32(m_k)).astype(jnp.int32)
+    return e * theta + r
+
+
+def _exp2_div_theta(v: jnp.ndarray, theta: int) -> jnp.ndarray:
+    """Correctly-rounded float32 of 2^(v/theta) for int32 v >= -128."""
+    off = -(-128 // theta) * theta          # multiple of theta, >= 128
+    w = v.astype(jnp.int32) + off           # >= 0: int div/mod are safe
+    q = w // theta - off // theta
+    r = w - (w // theta) * theta            # in [0, theta)
+    pow2 = jax.lax.bitcast_convert_type(
+        ((q + 127) << _MANT_BITS).astype(jnp.int32), jnp.float32)
+    frac = jnp.zeros(v.shape, jnp.float32)
+    for k, t in enumerate(_frac_table(theta)):
+        frac = jnp.where(r == k, jnp.float32(t), frac)
+    return frac * pow2                      # exact power-of-two scaling
 
 
 def encode_scale(scale: jnp.ndarray, theta: int = 10) -> jnp.ndarray:
     """Positive scales -> int8 code: floor(log2(s) * theta), clamped."""
     s = jnp.maximum(scale.astype(jnp.float32), _MAG_MIN)
-    code = jnp.floor(jnp.log2(s) * theta)
+    code = _floor_log2_theta(s, theta)
     return jnp.clip(code, -128, 127).astype(jnp.int8)
 
 
 def decode_scale(code: jnp.ndarray, theta: int = 10) -> jnp.ndarray:
-    return jnp.exp2(code.astype(jnp.float32) / theta)
+    return _exp2_div_theta(code.astype(jnp.int32), theta)
 
 
 def encode_signed(x: jnp.ndarray, theta: int = 10) -> jnp.ndarray:
@@ -35,17 +136,17 @@ def encode_signed(x: jnp.ndarray, theta: int = 10) -> jnp.ndarray:
     xf = x.astype(jnp.float32)
     sign = (xf < 0).astype(jnp.uint8)
     mag = jnp.maximum(jnp.abs(xf), _MAG_MIN)
-    code = jnp.floor(jnp.log2(mag) * theta) + _LOG_BIAS
-    code = jnp.clip(code, 1, 127).astype(jnp.uint8)
+    icode = _floor_log2_theta(mag, theta) + _LOG_BIAS
+    code = jnp.clip(icode, 1, 127).astype(jnp.uint8)
     # exact/near-zero inputs map to code 0 => decode to exactly 0
-    tiny = jnp.abs(xf) < jnp.exp2((1.0 - _LOG_BIAS) / theta)
-    code = jnp.where(tiny, jnp.uint8(0), code)
+    # (icode < 1 is exactly the old `|x| < 2^((1-BIAS)/theta)` cutoff)
+    code = jnp.where(icode < 1, jnp.uint8(0), code)
     return (sign << 7) | code
 
 
 def decode_signed(code: jnp.ndarray, theta: int = 10) -> jnp.ndarray:
     sign = jnp.where((code >> 7) > 0, -1.0, 1.0)
-    mag_code = (code & 0x7F).astype(jnp.float32)
-    mag = jnp.exp2((mag_code - _LOG_BIAS) / theta)
+    mag_code = (code & 0x7F).astype(jnp.int32)
+    mag = _exp2_div_theta(mag_code - _LOG_BIAS, theta)
     mag = jnp.where(mag_code == 0, 0.0, mag)
     return sign * mag

@@ -6,13 +6,45 @@ in-group index), and the remaining values are quantized against the
 shrunk range. On dequantization the spikes are scattered back to their
 original positions. This narrows the dynamic range dramatically
 (paper Fig. 4) and makes INT2/INT3 usable.
+
+Implementation: the old argmin/argmax + ``take_along_axis`` +
+``nanmin``/``nanmax`` pipeline cost five variadic/gather reductions per
+group — by far the hottest part of the low-bit encode path (XLA lowers
+variadic arg-reductions and gathers to scalar loops on several
+backends). It is now plain vectorized min/max lane reductions plus
+first-match index selection:
+
+* the spike *values* are ONE fused (NaN-propagating) min+max reduction —
+  no gather: the min/max of a group IS an element of it, bit-exactly;
+* the spike *indices* are ONE more fused pass: first position matching
+  the min, and the two first positions matching the max (an associative
+  top-2 min network — only min/max lane ops, so the variadic reduce
+  stays vectorized), so a group whose min and max collide on the same
+  slot (constant groups, duplicated extremes, multi-NaN) still reserves
+  two distinct slots with first-occurrence tie-breaking — exactly the
+  old argmin/argmax-over-masked behaviour;
+* the shrunk range is one fused min/max pass with the spike slots (and
+  NaNs, matching ``nanmin``/``nanmax``) masked out; a group whose
+  remaining values are all NaN yields NaN scale/zero, ditto.
+
+NaN semantics (diverged grads): a NaN group propagates NaN min/max, the
+first NaN claims the min slot and the second NaN (if any) the max slot,
+as before. The one deliberate change: a group with exactly ONE NaN used
+to reserve its finite max as the second spike; it now forfeits the max
+slot (both recorded spikes are the NaN) — the group is already poisoned,
+and keeping the fast fused election is worth more than reserving a
+finite extreme next to a NaN.
+
+All of this is pure jnp (compare/select lane ops), used verbatim by
+every backend — the jnp reference, the Pallas kernels and the RDMA
+collectives — so spike bytes cannot drift between them.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core.quant import group_reshape, group_unreshape
 
@@ -27,26 +59,86 @@ class SpikeQuant(NamedTuple):
     spike_idx: jnp.ndarray   # (..., n_groups, 2) int8 in-group positions
 
 
+def _min_max(xg: jnp.ndarray):
+    """Fused NaN-propagating (min, max) over the last axis, one pass."""
+    return lax.reduce(
+        (xg, xg), (jnp.float32(jnp.inf), jnp.float32(-jnp.inf)),
+        lambda a, b: (jnp.minimum(a[0], b[0]), jnp.maximum(a[1], b[1])),
+        (xg.ndim - 1,))
+
+
+def _spike_positions(eq_min, eq_max, pos, group: int):
+    """One fused pass: (first eq_min pos, first and second eq_max pos).
+
+    The top-2 selection for eq_max is an associative min network (only
+    min/max lane ops, so the reduce stays vectorized). A single element
+    summarizes as ``(pos, group)`` — the third operand is the constant
+    ``group`` so singletons don't count twice in the top-2 merge.
+
+    Everything runs on uint8 lanes (in-group positions are < 128, and
+    the ``group`` sentinel still fits) — 4x the SIMD width and a quarter
+    of the memory traffic of int32 positions on this, the hottest
+    reduction of the low-bit encode path.
+    """
+    big = jnp.uint8(group)
+    pmin = jnp.where(eq_min, pos, big)
+    pmax = jnp.where(eq_max, pos, big)
+
+    def comp(a, b):
+        i_a, t1a, t2a = a
+        i_b, t1b, t2b = b
+        t1 = jnp.minimum(t1a, t1b)
+        t2 = jnp.minimum(jnp.maximum(t1a, t1b), jnp.minimum(t2a, t2b))
+        return (jnp.minimum(i_a, i_b), t1, t2)
+
+    return lax.reduce((pmin, pmax, jnp.full_like(pmax, big)),
+                      (big, big, big), comp, (pos.ndim - 1,))
+
+
 def spike_quantize(x: jnp.ndarray, bits: int, group: int,
                    meta_dtype=jnp.bfloat16) -> SpikeQuant:
+    assert group <= 128, "in-group spike indices are int8 on the wire"
     xg = group_reshape(x.astype(jnp.float32), group)
     qmax = float(2 ** bits - 1)
+    pos = lax.broadcasted_iota(jnp.uint8, xg.shape, xg.ndim - 1)
+    nan = jnp.isnan(xg)
 
-    imin = jnp.argmin(xg, axis=-1)
-    # Mask out the min position so imax != imin even for constant groups.
-    pos = jnp.arange(group, dtype=jnp.int32)
+    # spike values: one fused NaN-propagating min+max pass (the extreme
+    # of a group is an element of it, so the value bits are exact)
+    vmin, vmax = _min_max(xg)
+    has_nan = jnp.isnan(vmin)
+
+    # spike indices: first min match, first + second max match (second
+    # resolves min/max landing on the same slot: constant groups,
+    # duplicated extremes, >= 2 NaNs)
+    eq_min = jnp.where(has_nan[..., None], nan, xg == vmin[..., None])
+    eq_max = jnp.where(has_nan[..., None], nan, xg == vmax[..., None])
+    imin, imax1, imax2 = _spike_positions(eq_min, eq_max, pos, group)
+    imax = jnp.where(imax1 == imin, imax2, imax1)
+    # single-NaN groups forfeit the max slot (imax2 is the out-of-range
+    # sentinel); keep the wire index valid by pointing it at the min
+    # slot — both spikes are the NaN, and the decode scatter writes the
+    # same NaN there twice
+    imax = jnp.where(imax == jnp.uint8(group), imin, imax)
     min_mask = pos == imin[..., None]
-    imax = jnp.argmax(jnp.where(min_mask, -jnp.inf, xg), axis=-1)
     max_mask = pos == imax[..., None]
     spike_mask = min_mask | max_mask
 
-    vmin = jnp.take_along_axis(xg, imin[..., None], axis=-1)[..., 0]
-    vmax = jnp.take_along_axis(xg, imax[..., None], axis=-1)[..., 0]
+    # Shrunk range over the remaining group-2 values (NaNs ignored, as
+    # nanmin/nanmax did; all-NaN remainder -> NaN scale/zero, ditto).
+    # Each side only needs its own spike slot masked: leaving the max in
+    # cannot move a min (and vice versa), so the masks stay one compare.
+    mn, mx = lax.reduce(
+        (jnp.where(min_mask | nan, jnp.inf, xg),
+         jnp.where(max_mask | nan, -jnp.inf, xg)),
+        (jnp.float32(jnp.inf), jnp.float32(-jnp.inf)),
+        lambda a, b: (jnp.minimum(a[0], b[0]), jnp.maximum(a[1], b[1])),
+        (xg.ndim - 1,))
+    # both extremes untouched by data <=> every remaining value was NaN
+    all_dropped = (mn == jnp.inf) & (mx == -jnp.inf)
+    mn = jnp.where(all_dropped, jnp.float32(jnp.nan), mn)
+    mx = jnp.where(all_dropped, jnp.float32(jnp.nan), mx)
 
-    # Shrunk range over the remaining group-2 values.
-    inner = jnp.where(spike_mask, jnp.nan, xg)
-    mn = jnp.nanmin(inner, axis=-1)
-    mx = jnp.nanmax(inner, axis=-1)
     scale = (mx - mn) / qmax
     scale_w = jnp.maximum(scale, _EPS).astype(meta_dtype)
     zero_w = mn.astype(meta_dtype)
@@ -54,9 +146,14 @@ def spike_quantize(x: jnp.ndarray, bits: int, group: int,
     z = zero_w.astype(jnp.float32)[..., None]
     # Spike slots are set to the new minimum before quantization (paper:
     # "set them to zeros" of the shrunk range); their codes are dummies
-    # overwritten on dequant.
-    filled = jnp.where(spike_mask, mn[..., None], xg)
-    codes = jnp.clip(jnp.round((filled - z) / s), 0.0, qmax).astype(jnp.uint8)
+    # overwritten on dequant. Quantizing xg everywhere and patching the
+    # spike slots with the (per-group) code of `mn` afterwards is the
+    # same arithmetic per element, but moves the select from float lanes
+    # to uint8 code lanes.
+    codes = jnp.clip(jnp.round((xg - z) / s), 0.0, qmax).astype(jnp.uint8)
+    code_mn = jnp.clip(jnp.round((mn - z[..., 0]) / s[..., 0]),
+                       0.0, qmax).astype(jnp.uint8)
+    codes = jnp.where(spike_mask, code_mn[..., None], codes)
 
     spike_vals = jnp.stack([vmin, vmax], axis=-1).astype(meta_dtype)
     spike_idx = jnp.stack([imin, imax], axis=-1).astype(jnp.int8)

@@ -1,0 +1,187 @@
+"""Shared wire-format tile bodies: the one codec implementation.
+
+``encode_tile`` / ``decode_tile`` are the complete per-tile codec bodies
+as pure ``(R, n) <-> (R, wire_bytes(n))`` array functions, and
+``encode_tile_into`` is the ref-writing variant for Pallas kernels. They
+are THE wire codec: the jnp reference backend (:mod:`repro.core.codec`),
+the fused Pallas wire kernels (:mod:`repro.kernels.wire`), the fused RDMA
+collectives (:mod:`repro.kernels.rdma_allreduce`,
+:mod:`repro.kernels.rdma_all2all`) and their CPU emulation
+(:mod:`repro.kernels.emulate`) all run these exact functions, so the
+backends cannot drift byte-wise (tests/test_wire_golden.py,
+tests/test_backend_equality.py).
+
+Performance shape (the hot path of the repo):
+
+* sections are written at the static offsets of
+  :meth:`repro.core.comm_config.CommConfig.wire_layout` — straight into
+  the output ref's slices inside kernels (``encode_tile_into``), via
+  in-place buffer updates in the pure form; no ``jnp.concatenate``
+  reassembly of the payload;
+* the bit-plane pack/unpack is the word-parallel uint32 shift/or tree of
+  :mod:`repro.core.wordpack` (no 8x byte-expand lanes);
+* the Eq.-1 scale/zero codec is the transcendental-free exponent
+  arithmetic of :mod:`repro.core.scale_codec`.
+
+Everything here is pure jnp — valid under jit/vmap/shard_map and inside
+Pallas kernel bodies (interpret or compiled).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scale_codec, wordpack
+from repro.core.comm_config import WireLayout, _wire_layout
+from repro.core.quant import dequantize, quantize
+from repro.core.spike import SpikeQuant, spike_dequantize, spike_quantize
+
+
+def tile_layout(n: int, *, bits: int, group: int, spike: bool,
+                scale_int: bool) -> WireLayout:
+    """The wire layout for one (R, n) tile (cached static offsets)."""
+    return _wire_layout(n, bits, group, spike, scale_int)
+
+
+def tile_kwargs(cfg, n: int) -> dict:
+    """The static kwargs of the tile bodies for one comm site.
+
+    The single builder every caller uses (ref codec, wire kernels, RDMA
+    kernels, emulation) — add a codec knob here and each backend picks
+    it up, instead of five hand-maintained dict literals drifting apart.
+    """
+    return dict(bits=cfg.bits, group=cfg.group, n=n, spike=cfg.spike,
+                scale_int=cfg.scale_int, theta=cfg.theta,
+                meta_dtype=jnp.dtype(cfg.meta_dtype))
+
+
+def _meta_to_bytes(m: jnp.ndarray) -> jnp.ndarray:
+    """(R, k) 2-byte meta dtype -> (R, 2k) uint8, little-endian pairs."""
+    b = jax.lax.bitcast_convert_type(m, jnp.uint8)        # (R, k, 2)
+    return b.reshape(*m.shape[:-1], -1)
+
+
+def _bytes_to_meta(b: jnp.ndarray, dtype, k: int) -> jnp.ndarray:
+    """(R, 2k) uint8 -> (R, k) 2-byte meta dtype."""
+    return jax.lax.bitcast_convert_type(
+        b.reshape(*b.shape[:-1], k, 2), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# encode: float tile -> wire sections at layout offsets
+# ---------------------------------------------------------------------------
+
+def encode_sections(x: jnp.ndarray, *, bits: int, group: int, n: int,
+                    spike: bool, scale_int: bool, theta: int, meta_dtype):
+    """(R, n) float tile -> [(Section, uint8 bytes), ...] in wire order.
+
+    The single place the wire format is produced; both ``encode_tile``
+    variants just place these sections.
+    """
+    assert x.shape[-1] == n, (x.shape, n)
+    rows = x.shape[0]
+    g = n // group
+    layout = tile_layout(n, bits=bits, group=group, spike=spike,
+                         scale_int=scale_int)
+
+    if spike:
+        q = spike_quantize(x, bits, group, meta_dtype)
+        codes, scale_w, zero_w = q.codes, q.scale, q.zero
+    else:
+        codes, scale_w, zero_w = quantize(x, bits, group, meta_dtype)
+    codes = codes.reshape(rows, n)
+
+    out = []
+    for (unit, span), (u2, plane) in zip(
+            layout.planes, wordpack.pack_codes(codes, bits)):
+        assert unit == u2 and plane.shape[-1] == span.nbytes
+        out.append((span, plane))                         # bit splitting
+
+    if scale_int:                                         # paper Eq. 1
+        out.append((layout.scale, jax.lax.bitcast_convert_type(
+            scale_codec.encode_scale(scale_w, theta), jnp.uint8)))
+        out.append((layout.zero,
+                    scale_codec.encode_signed(zero_w, theta)))
+    else:
+        out.append((layout.scale, _meta_to_bytes(scale_w)))
+        out.append((layout.zero, _meta_to_bytes(zero_w)))
+
+    if spike:                                             # paper Fig. 5c
+        sv = q.spike_vals.reshape(rows, 2 * g)            # exact bf16
+        out.append((layout.spike_vals, _meta_to_bytes(sv)))
+        si = q.spike_idx.reshape(rows, 2 * g)
+        if scale_int:                                     # int8 indices
+            out.append((layout.spike_idx,
+                        jax.lax.bitcast_convert_type(si, jnp.uint8)))
+        else:                                             # bf16 baseline
+            out.append((layout.spike_idx,
+                        _meta_to_bytes(si.astype(meta_dtype))))
+    return out
+
+
+def encode_tile_into(x: jnp.ndarray, wire_ref, **kw) -> None:
+    """Encode an (R, n) tile, writing each wire section straight into its
+    ``wire_layout`` slice of ``wire_ref`` (a Pallas ref or any object
+    supporting 2-D slice assignment). No concatenate, no second pass."""
+    for span, sec in encode_sections(x, **kw):
+        wire_ref[:, span.offset:span.end] = sec
+
+
+def encode_tile(x: jnp.ndarray, *, bits: int, group: int, n: int,
+                spike: bool, scale_int: bool, theta: int,
+                meta_dtype) -> jnp.ndarray:
+    """(R, n) float tile -> (R, wire_bytes(n)) uint8 wire tile (pure)."""
+    layout = tile_layout(n, bits=bits, group=group, spike=spike,
+                         scale_int=scale_int)
+    buf = jnp.zeros((x.shape[0], layout.total), jnp.uint8)
+    for span, sec in encode_sections(
+            x, bits=bits, group=group, n=n, spike=spike,
+            scale_int=scale_int, theta=theta, meta_dtype=meta_dtype):
+        buf = buf.at[:, span.offset:span.end].set(sec)
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# decode: wire tile -> float tile
+# ---------------------------------------------------------------------------
+
+def decode_tile(wire: jnp.ndarray, *, bits: int, group: int, n: int,
+                spike: bool, scale_int: bool, theta: int, meta_dtype,
+                out_dtype) -> jnp.ndarray:
+    """(R, wire_bytes(n)) uint8 wire tile -> (R, n) out_dtype tile."""
+    rows = wire.shape[0]
+    g = n // group
+    layout = tile_layout(n, bits=bits, group=group, spike=spike,
+                         scale_int=scale_int)
+    assert wire.shape[-1] == layout.total, (wire.shape, layout.total)
+
+    def read_plane(i, unit, nbytes):
+        span = layout.planes[i][1]
+        assert span.nbytes == nbytes
+        return wire[:, span.offset:span.end]
+
+    codes = wordpack.unpack_codes(read_plane, bits, n)
+
+    sb = wire[:, layout.scale.offset:layout.scale.end]
+    zb = wire[:, layout.zero.offset:layout.zero.end]
+    if scale_int:
+        scale = scale_codec.decode_scale(
+            jax.lax.bitcast_convert_type(sb, jnp.int8), theta)
+        zero = scale_codec.decode_signed(zb, theta)
+    else:
+        scale = _bytes_to_meta(sb, meta_dtype, g)
+        zero = _bytes_to_meta(zb, meta_dtype, g)
+
+    codes = codes.reshape(rows, g, group)
+    if spike:
+        svb = wire[:, layout.spike_vals.offset:layout.spike_vals.end]
+        sv = _bytes_to_meta(svb, meta_dtype, 2 * g)
+        sib = wire[:, layout.spike_idx.offset:layout.spike_idx.end]
+        if scale_int:
+            si = jax.lax.bitcast_convert_type(sib, jnp.int8)
+        else:
+            si = _bytes_to_meta(sib, meta_dtype, 2 * g).astype(jnp.int8)
+        q = SpikeQuant(codes, scale, zero,
+                       sv.reshape(rows, g, 2), si.reshape(rows, g, 2))
+        return spike_dequantize(q, out_dtype)
+    return dequantize(codes, scale, zero, out_dtype)

@@ -1,0 +1,120 @@
+"""Word-parallel bit-plane pack/unpack: the codec's innermost loop.
+
+One shared implementation of the paper's bit-splitting plane layout for
+every call site — the pure-jnp reference codec (:mod:`repro.core.bitsplit`,
+:mod:`repro.core.codec`), the fused Pallas wire kernels
+(:mod:`repro.kernels.wire`, ``quant_pack``, ``dequant_unpack``,
+``spike_reserve``) and the fused RDMA collectives — so the backends
+cannot drift byte-wise.
+
+The previous implementations expanded every byte into ``8 // unit``
+uint8/uint32 lanes (``x[..., None] >> shifts``) and reduced with a sum:
+an 8x lane blowup per 1-bit plane plus a broadcasted multiply-add, on
+the hottest path in the repo. Here both directions are log-depth
+shift/or trees on uint32 lanes:
+
+* ``pack_plane``: ``log2(8/unit)`` halving steps, each one strided
+  slice + shift + or. Total lane work ~``2n`` instead of ``8n``, no
+  broadcast intermediate, no multiply.
+* ``unpack_plane``: the inverse doubling tree (mask/shift + interleave).
+
+Byte layout is unchanged (LSB-first within each byte, values packed in
+index order) — golden wire vectors pin it (tests/test_wire_golden.py).
+All functions are pure jnp: jit/vmap/shard_map-safe, and valid inside
+Pallas kernel bodies (interpret or compiled) where they lower to plain
+VPU shift/or lane ops.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.comm_config import BIT_UNITS
+
+
+def plane_nbytes(n: int, unit: int) -> int:
+    """Wire bytes for one ``unit``-bit plane of ``n`` values (ceil)."""
+    return (n * unit + 7) // 8
+
+
+def pack_plane(field: jnp.ndarray, unit: int) -> jnp.ndarray:
+    """(..., n) sub-byte values (< 2^unit) -> (..., ceil(n*unit/8)) uint8.
+
+    LSB-first within each byte: byte ``b`` holds values
+    ``b*per .. b*per+per-1`` at bit offsets ``0, unit, 2*unit, ...``.
+    Tails (n not a multiple of ``8 // unit``) are zero-padded, matching
+    :func:`unpack_plane`'s trailing slice.
+    """
+    if unit == 8:
+        return field.astype(jnp.uint8)
+    assert unit in (1, 2, 4), unit
+    per = 8 // unit
+    n = field.shape[-1]
+    rem = (-n) % per
+    if rem:
+        pad = [(0, 0)] * (field.ndim - 1) + [(0, rem)]
+        field = jnp.pad(field, pad)
+    v = field.astype(jnp.uint32)
+    width = unit
+    while width < 8:                       # log2(per) halving steps
+        v = v[..., 0::2] | (v[..., 1::2] << width)
+        width *= 2
+    return v.astype(jnp.uint8)
+
+
+def unpack_plane(packed: jnp.ndarray, unit: int, n: int) -> jnp.ndarray:
+    """(..., ceil(n*unit/8)) uint8 -> (..., n) uint8 plane values.
+
+    Exact inverse of :func:`pack_plane` (zero-padded tail sliced off).
+    """
+    if unit == 8:
+        return packed.astype(jnp.uint8)
+    assert unit in (1, 2, 4), unit
+    v = packed.astype(jnp.uint32)
+    width = 8
+    while width > unit:                    # log2(per) doubling steps
+        width //= 2
+        mask = jnp.uint32((1 << width) - 1)
+        lo = (v & mask)[..., None]
+        hi = (v >> width)[..., None]
+        v = jnp.concatenate([lo, hi], axis=-1)
+        v = v.reshape(*v.shape[:-2], v.shape[-2] * 2)
+    out = v.astype(jnp.uint8)
+    if out.shape[-1] != n:
+        out = out[..., :n]
+    return out
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> list:
+    """Split (..., n) codes into the bit-split planes of ``bits``.
+
+    Returns ``[(unit, packed_plane), ...]`` in wire order (regular part
+    first, then the extra bit planes — paper Fig. 3). The caller places
+    each plane at its :func:`repro.core.comm_config.CommConfig.wire_layout`
+    offset.
+    """
+    planes = []
+    shift = 0
+    for unit in BIT_UNITS[bits]:
+        field = (codes >> shift) & ((1 << unit) - 1)
+        planes.append((unit, pack_plane(field, unit)))
+        shift += unit
+    return planes
+
+
+def unpack_codes(read_plane, bits: int, n: int) -> jnp.ndarray:
+    """Rebuild (..., n) uint8 codes from the bit-split planes.
+
+    ``read_plane(plane_index, unit, nbytes)`` returns the packed bytes of
+    plane ``plane_index`` (so callers can slice a wire buffer or a ref at
+    layout offsets without materialising the payload twice).
+    """
+    out = None
+    shift = 0
+    for i, unit in enumerate(BIT_UNITS[bits]):
+        plane = read_plane(i, unit, plane_nbytes(n, unit))
+        vals = unpack_plane(plane, unit, n)
+        contrib = vals if shift == 0 else (
+            (vals.astype(jnp.uint32) << shift).astype(jnp.uint8))
+        out = contrib if out is None else out | contrib
+        shift += unit
+    return out

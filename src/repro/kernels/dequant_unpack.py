@@ -1,7 +1,8 @@
 """Fused bit-split unpack + dequantize Pallas kernel (inverse direction).
 
-Reads the packed uint8 wire tile + meta from VMEM, reconstructs codes with
-shift/mask lane ops, applies scale/zero, writes the float tile once.
+Reads the packed uint8 wire tile + meta from VMEM, reconstructs codes
+with the shared word-parallel shift/or tree (:mod:`repro.core.wordpack`),
+applies scale/zero, writes the float tile once.
 """
 from __future__ import annotations
 
@@ -11,35 +12,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import wordpack
 from repro.core.comm_config import BIT_UNITS
-from repro.kernels.quant_pack import ROW_BLOCK
-
-
-def _unpack_plane(plane: jnp.ndarray, unit: int, n: int) -> jnp.ndarray:
-    """(R, n*unit/8) uint8 -> (R, n) uint8 field values."""
-    if unit == 8:
-        return plane.astype(jnp.uint8)
-    per = 8 // unit
-    mask = jnp.uint8((1 << unit) - 1)
-    shifts = (jnp.arange(per, dtype=jnp.uint8) * unit)[None, None, :]
-    vals = (plane[..., None] >> shifts) & mask
-    return vals.reshape(plane.shape[0], n)
+from repro.kernels.quant_pack import ROW_BLOCK  # noqa: F401  (re-export)
 
 
 def _dequant_kernel(payload_ref, scale_ref, zero_ref, out_ref, *,
                     bits: int, group: int, n: int, out_dtype):
     rows = payload_ref.shape[0]
-    codes = jnp.zeros((rows, n), jnp.uint8)
+    offs = []
     off = 0
-    shift = 0
     for unit in BIT_UNITS[bits]:
-        width = n * unit // 8
-        plane = payload_ref[:, off:off + width]
-        field = _unpack_plane(plane, unit, n)
-        codes = codes | ((field.astype(jnp.uint32) << shift)
-                         .astype(jnp.uint8))
-        off += width
-        shift += unit
+        offs.append(off)
+        off += n * unit // 8
+
+    def read_plane(i, unit, nbytes):
+        return payload_ref[:, offs[i]:offs[i] + nbytes]
+
+    codes = wordpack.unpack_codes(read_plane, bits, n)
     s = scale_ref[...].astype(jnp.float32)[..., None]
     z = zero_ref[...].astype(jnp.float32)[..., None]
     xg = codes.reshape(rows, n // group, group).astype(jnp.float32)
@@ -48,26 +38,28 @@ def _dequant_kernel(payload_ref, scale_ref, zero_ref, out_ref, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "group", "n", "out_dtype",
-                                    "interpret"))
+                                    "block_rows", "interpret"))
 def dequant_unpack(payload: jnp.ndarray, scale: jnp.ndarray,
                    zero: jnp.ndarray, *, bits: int, group: int, n: int,
-                   out_dtype=jnp.float32, interpret: bool = True):
+                   out_dtype=jnp.float32, block_rows: int | None = None,
+                   interpret: bool = True):
     rows = payload.shape[0]
-    assert rows % ROW_BLOCK == 0
+    block = block_rows or rows
+    assert rows % block == 0
     nbytes = sum(n * u // 8 for u in BIT_UNITS[bits])
     groups = n // group
     assert payload.shape == (rows, nbytes)
-    grid = (rows // ROW_BLOCK,)
+    grid = (rows // block,)
     return pl.pallas_call(
         functools.partial(_dequant_kernel, bits=bits, group=group, n=n,
                           out_dtype=jnp.dtype(out_dtype)),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ROW_BLOCK, nbytes), lambda r: (r, 0)),
-            pl.BlockSpec((ROW_BLOCK, groups), lambda r: (r, 0)),
-            pl.BlockSpec((ROW_BLOCK, groups), lambda r: (r, 0)),
+            pl.BlockSpec((block, nbytes), lambda r: (r, 0)),
+            pl.BlockSpec((block, groups), lambda r: (r, 0)),
+            pl.BlockSpec((block, groups), lambda r: (r, 0)),
         ],
-        out_specs=[pl.BlockSpec((ROW_BLOCK, n), lambda r: (r, 0))],
+        out_specs=[pl.BlockSpec((block, n), lambda r: (r, 0))],
         out_shape=[jax.ShapeDtypeStruct((rows, n), jnp.dtype(out_dtype))],
         interpret=interpret,
     )(payload, scale, zero)[0]

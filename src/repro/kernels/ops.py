@@ -2,8 +2,17 @@
 
 ``use_pallas=None`` (default) picks the Pallas path on TPU and the pure-jnp
 reference path elsewhere; ``interpret`` mode is selected automatically on
-CPU so the kernels stay testable in this container. Row counts are padded
-to ROW_BLOCK transparently.
+CPU so the kernels stay testable in this container.
+
+The dispatchers pick the kernel row block from the tile size instead of
+a fixed 8-row grid: off-TPU (interpret mode) the whole array is one grid
+step — interpret-mode ``pallas_call`` pays a large per-grid-step overhead,
+so an 8-row block turned every encode into ``R/8`` sequential interpreted
+tiles; on TPU the block is VMEM-budgeted (~2 MB of float tile per step)
+and rounded to the 8-sublane quantum. Rows are padded to the chosen block
+transparently, which for the single-step case means no padding at all.
+The underlying kernel entry points are ``jax.jit``-cached per
+(shape, config, block) so repeated dispatches reuse one closure.
 """
 from __future__ import annotations
 
@@ -19,14 +28,34 @@ from repro.kernels.quant_pack import ROW_BLOCK, quant_pack
 from repro.kernels.spike_reserve import spike_pack
 from repro.kernels.wire import decode_wire, encode_wire
 
+# VMEM budget for one compiled-TPU float tile (bytes). ~2 MB leaves room
+# for the wire output + double buffering inside the ~16 MB/core VMEM.
+_TILE_BUDGET = 2 << 20
+
 
 def _backend() -> str:
     return jax.default_backend()
 
 
-def _pad_rows(x: jnp.ndarray):
+def _pick_block(rows: int, n: int, on_tpu: bool) -> int:
+    """Kernel row block for an (rows, n) float tile.
+
+    TPU blocks are VMEM-budgeted and split the rows EVENLY across grid
+    steps (rounded up to the 8-sublane quantum), so padding never
+    exceeds ROW_BLOCK-1 rows — naively rounding the budget down would
+    pad e.g. 65 rows to 128 (a near-2x compute blowup) instead of 72.
+    """
+    if not on_tpu:
+        return rows                     # interpret mode: one grid step
+    cap = max(ROW_BLOCK, _TILE_BUDGET // (4 * n))
+    steps = -(-rows // cap)             # grid steps at the VMEM cap
+    per = -(-rows // steps)             # even rows per step
+    return -(-per // ROW_BLOCK) * ROW_BLOCK
+
+
+def _pad_rows(x: jnp.ndarray, block: int):
     rows = x.shape[0]
-    rem = (-rows) % ROW_BLOCK
+    rem = (-rows) % block
     if rem:
         x = jnp.pad(x, ((0, rem), (0, 0)))
     return x, rows
@@ -39,9 +68,11 @@ def fused_quant_pack(x: jnp.ndarray, bits: int, group: int,
         use_pallas = _backend() == "tpu"
     if not use_pallas:
         return ref.quant_pack_ref(x, bits, group)
-    xp, rows = _pad_rows(x)
-    p, s, z = quant_pack(xp, bits=bits, group=group,
-                         interpret=_backend() != "tpu")
+    on_tpu = _backend() == "tpu"
+    block = _pick_block(x.shape[0], x.shape[1], on_tpu)
+    xp, rows = _pad_rows(x, block)
+    p, s, z = quant_pack(xp, bits=bits, group=group, block_rows=block,
+                         interpret=not on_tpu)
     return p[:rows], s[:rows], z[:rows]
 
 
@@ -53,12 +84,14 @@ def fused_dequant_unpack(payload, scale, zero, bits: int, group: int,
     if not use_pallas:
         return ref.dequant_unpack_ref(payload, scale, zero, bits, group, n,
                                       out_dtype)
-    pp, rows = _pad_rows(payload)
-    sp, _ = _pad_rows(scale)
-    zp, _ = _pad_rows(zero)
+    on_tpu = _backend() == "tpu"
+    block = _pick_block(payload.shape[0], n, on_tpu)
+    pp, rows = _pad_rows(payload, block)
+    sp, _ = _pad_rows(scale, block)
+    zp, _ = _pad_rows(zero, block)
     out = dequant_unpack(pp, sp, zp, bits=bits, group=group, n=n,
-                         out_dtype=out_dtype,
-                         interpret=_backend() != "tpu")
+                         out_dtype=out_dtype, block_rows=block,
+                         interpret=not on_tpu)
     return out[:rows]
 
 
@@ -69,9 +102,11 @@ def fused_spike_pack(x: jnp.ndarray, bits: int, group: int,
         use_pallas = _backend() == "tpu"
     if not use_pallas:
         return ref.spike_pack_ref(x, bits, group)
-    xp, rows = _pad_rows(x)
-    outs = spike_pack(xp, bits=bits, group=group,
-                      interpret=_backend() != "tpu")
+    on_tpu = _backend() == "tpu"
+    block = _pick_block(x.shape[0], x.shape[1], on_tpu)
+    xp, rows = _pad_rows(x, block)
+    outs = spike_pack(xp, bits=bits, group=group, block_rows=block,
+                      interpret=not on_tpu)
     return tuple(o[:rows] for o in outs)
 
 
@@ -91,11 +126,13 @@ def fused_encode_wire(x: jnp.ndarray, cfg, use_pallas: bool | None = None):
     if not use_pallas:
         from repro.core import codec
         return codec.encode_ref(x, cfg)
-    xp, rows = _pad_rows(x)
+    on_tpu = _backend() == "tpu"
+    block = _pick_block(x.shape[0], x.shape[1], on_tpu)
+    xp, rows = _pad_rows(x, block)
     buf = encode_wire(xp, bits=cfg.bits, group=cfg.group, spike=cfg.spike,
                       scale_int=cfg.scale_int, theta=cfg.theta,
-                      meta_dtype=cfg.meta_dtype,
-                      interpret=_backend() != "tpu")
+                      meta_dtype=cfg.meta_dtype, block_rows=block,
+                      interpret=not on_tpu)
     return buf[:rows]
 
 
@@ -108,11 +145,14 @@ def fused_decode_wire(buf: jnp.ndarray, cfg, n: int,
     if not use_pallas:
         from repro.core import codec
         return codec.decode_ref(buf, cfg, n, out_dtype)
-    bp, rows = _pad_rows(buf)
+    on_tpu = _backend() == "tpu"
+    block = _pick_block(buf.shape[0], n, on_tpu)
+    bp, rows = _pad_rows(buf, block)
     out = decode_wire(bp, bits=cfg.bits, group=cfg.group, n=n,
                       spike=cfg.spike, scale_int=cfg.scale_int,
                       theta=cfg.theta, meta_dtype=cfg.meta_dtype,
-                      out_dtype=out_dtype, interpret=_backend() != "tpu")
+                      out_dtype=out_dtype, block_rows=block,
+                      interpret=not on_tpu)
     return out[:rows]
 
 

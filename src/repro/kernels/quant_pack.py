@@ -2,14 +2,17 @@
 
 TPU mapping of the paper's fusion kernel (a CUDA block per 4096-number
 chunk, 512 threads x 8 BF16 each): here one *grid step* handles a VMEM
-tile of ``(ROW_BLOCK, chunk)`` numbers. The quantize (per-group min/max,
+tile of ``(block_rows, chunk)`` numbers. The quantize (per-group min/max,
 scale/zero) and the bit-split pack (4/2/1-bit planes -> uint8 lanes) are
 fused so the float tensor is read from HBM exactly once and only wire
 bytes are written back.
 
-Alignment: ``chunk`` (default 4096) and all plane widths are multiples of
-128 lanes (4096*4/8=2048, *2/8=1024, *1/8=512), so every output block is
-lane-aligned for the VPU. Group reductions (32/128 wide) are in-register.
+The pack inner loop is the shared word-parallel uint32 shift/or tree of
+:mod:`repro.core.wordpack` (same code as the reference codec — no
+duplicate plane packers to drift). Alignment: ``chunk`` (default 4096)
+and all plane widths are multiples of 128 lanes (4096*4/8=2048,
+*2/8=1024, *1/8=512), so every output block is lane-aligned for the VPU.
+Group reductions (32/128 wide) are in-register.
 """
 from __future__ import annotations
 
@@ -19,72 +22,56 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import wordpack
 from repro.core.comm_config import BIT_UNITS
+from repro.core.quant import quantize
 
-_EPS = 1e-12
+# Historical fixed block size; kept as the TPU sublane quantum. The
+# dispatchers in ops.py now pick the actual block from the tile size.
 ROW_BLOCK = 8
-
-
-def _pack_plane(field: jnp.ndarray, unit: int, n: int) -> jnp.ndarray:
-    """(R, n) sub-byte field -> (R, n*unit/8) uint8, LSB-first in byte."""
-    if unit == 8:
-        return field.astype(jnp.uint8)
-    per = 8 // unit
-    v = field.reshape(field.shape[0], n // per, per).astype(jnp.uint32)
-    shifts = (jnp.arange(per, dtype=jnp.uint32) * unit)[None, None, :]
-    return jnp.sum(v << shifts, axis=-1).astype(jnp.uint8)
 
 
 def _quant_pack_kernel(x_ref, payload_ref, scale_ref, zero_ref, *,
                        bits: int, group: int, n: int):
-    x = x_ref[...].astype(jnp.float32)                     # (R, n)
-    rows = x.shape[0]
-    qmax = float(2 ** bits - 1)
-    xg = x.reshape(rows, n // group, group)
-    mn = jnp.min(xg, axis=-1)
-    mx = jnp.max(xg, axis=-1)
-    scale_w = jnp.maximum((mx - mn) / qmax, _EPS).astype(jnp.bfloat16)
-    zero_w = mn.astype(jnp.bfloat16)
-    s = scale_w.astype(jnp.float32)[..., None]
-    z = zero_w.astype(jnp.float32)[..., None]
-    codes = jnp.clip(jnp.round((xg - z) / s), 0.0, qmax).astype(jnp.uint8)
+    rows = x_ref.shape[0]
+    # the shared quantizer (fused one-pass group min/max) — identical
+    # math to the jnp reference by construction
+    codes, scale_w, zero_w = quantize(x_ref[...], bits, group)
     codes = codes.reshape(rows, n)
 
     off = 0
-    shift = 0
-    for unit in BIT_UNITS[bits]:                           # bit splitting
-        mask = (1 << unit) - 1
-        field = (codes >> shift) & mask
-        plane = _pack_plane(field, unit, n)
+    for unit, plane in wordpack.pack_codes(codes, bits):   # bit splitting
         width = n * unit // 8
         payload_ref[:, off:off + width] = plane
         off += width
-        shift += unit
     scale_ref[...] = scale_w
     zero_ref[...] = zero_w
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "group", "interpret"))
+                   static_argnames=("bits", "group", "block_rows",
+                                    "interpret"))
 def quant_pack(x: jnp.ndarray, *, bits: int, group: int,
-               interpret: bool = True):
+               block_rows: int | None = None, interpret: bool = True):
     """(R, n) float -> (payload u8 (R, n*bits/8), scale, zero (R, n/group)).
 
-    R must be a multiple of ROW_BLOCK (wrapper in ops.py pads).
+    R must be a multiple of ``block_rows`` (default: whole array, one
+    grid step; the wrapper in ops.py pads and picks the block).
     """
     rows, n = x.shape
-    assert rows % ROW_BLOCK == 0 and n % group == 0
+    block = block_rows or rows
+    assert rows % block == 0 and n % group == 0
     nbytes = sum(n * u // 8 for u in BIT_UNITS[bits])
     groups = n // group
-    grid = (rows // ROW_BLOCK,)
+    grid = (rows // block,)
     return pl.pallas_call(
         functools.partial(_quant_pack_kernel, bits=bits, group=group, n=n),
         grid=grid,
-        in_specs=[pl.BlockSpec((ROW_BLOCK, n), lambda r: (r, 0))],
+        in_specs=[pl.BlockSpec((block, n), lambda r: (r, 0))],
         out_specs=[
-            pl.BlockSpec((ROW_BLOCK, nbytes), lambda r: (r, 0)),
-            pl.BlockSpec((ROW_BLOCK, groups), lambda r: (r, 0)),
-            pl.BlockSpec((ROW_BLOCK, groups), lambda r: (r, 0)),
+            pl.BlockSpec((block, nbytes), lambda r: (r, 0)),
+            pl.BlockSpec((block, groups), lambda r: (r, 0)),
+            pl.BlockSpec((block, groups), lambda r: (r, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((rows, nbytes), jnp.uint8),

@@ -92,7 +92,7 @@ def fused_all_to_all_rdma(x: jnp.ndarray, axis: str, cfg: CommConfig,
     d = x.shape[-1]
     assert d % cfg.group == 0, (d, cfg.group)
     m = math.prod(x.shape[1:-1]) if x.ndim > 2 else 1
-    wb = cfg.wire_bytes(d)
+    wb = cfg.wire_layout(d).total         # per-peer RDMA chunk addressing
     mesh_axes = tuple(mesh_axes) if mesh_axes else (axis,)
     assert axis in mesh_axes, (axis, mesh_axes)
     kw = _cfg_kw(cfg, d)

@@ -42,13 +42,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 from repro.core.comm_config import CommConfig
-from repro.kernels.wire import decode_tile, encode_tile
-
-
-def _cfg_kw(cfg: CommConfig, chunk: int) -> dict:
-    return dict(bits=cfg.bits, group=cfg.group, n=chunk, spike=cfg.spike,
-                scale_int=cfg.scale_int, theta=cfg.theta,
-                meta_dtype=jnp.dtype(cfg.meta_dtype))
+from repro.kernels.wire import _cfg_kw, decode_tile, encode_tile_into
 
 
 def _peer_coords(dst, axis: str, mesh_axes: Sequence[str]):
@@ -102,8 +96,10 @@ def _scatter_reduce_kernel(x_ref, partial_ref, send_buf, recv_buf,
                            send_sem, recv_sem, *, axis: str,
                            mesh_axes: Sequence[str], tp: int, kw: dict):
     my = lax.axis_index(axis)
-    wire = encode_tile(x_ref[...], **kw)                  # (tp, wb)
-    send_buf[...] = wire
+    # encode the tp per-peer rows section-by-section straight into the
+    # send staging buffer at wire_layout offsets (no concatenate pass)
+    encode_tile_into(x_ref[...], send_buf, **kw)          # (tp, wb)
+    wire = send_buf[...]
     _ring_barrier(my, tp, axis, mesh_axes)
     # push row p of my wire to peer p; it lands in recv_buf[my] over there
     _push_rows(send_buf, recv_buf, my, send_sem, recv_sem, my, tp,
@@ -119,8 +115,8 @@ def _gather_kernel(partial_ref, out_ref, send_buf, gather_buf,
                    send_sem, recv_sem, *, axis: str,
                    mesh_axes: Sequence[str], tp: int, kw: dict):
     my = lax.axis_index(axis)
-    wire = encode_tile(partial_ref[...], **kw)            # (1, wb)
-    send_buf[...] = wire
+    encode_tile_into(partial_ref[...], send_buf, **kw)    # (1, wb)
+    wire = send_buf[...]
     _ring_barrier(my, tp, axis, mesh_axes)
     # push my (single) partial-sum row into every peer's slot my
     _push_rows(send_buf, gather_buf, my, send_sem, recv_sem, my, tp,
@@ -151,7 +147,7 @@ def fused_all_reduce_rdma(x: jnp.ndarray, axis: str, cfg: CommConfig,
     n = x.shape[-1]
     assert n % tp == 0 and (n // tp) % cfg.group == 0, (n, tp, cfg.group)
     chunk = n // tp
-    wb = cfg.wire_bytes(chunk)
+    wb = cfg.wire_layout(chunk).total     # send/recv buffer addressing
     mesh_axes = tuple(mesh_axes) if mesh_axes else (axis,)
     assert axis in mesh_axes, (axis, mesh_axes)
     kw = _cfg_kw(cfg, chunk)

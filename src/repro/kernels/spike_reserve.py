@@ -3,8 +3,11 @@
 Per VMEM tile: find each group's min/max ("spikes"), record their values
 (bf16-exact) and in-group indices (int8), re-derive the shrunk range from
 the remaining ``group-2`` values, quantize against it and bit-split pack —
-all in one pass over the float tile. The argmin/argmax and the masked
-second reduction are VPU lane reductions over the (32-wide) group axis.
+all in one pass over the float tile. The spike election and the masked
+second reduction are the shared sort-key ``lax.reduce`` passes of
+:mod:`repro.core.spike` (VPU lane ops over the 32-wide group axis) — the
+exact code the reference backend runs, so the kernel cannot drift from
+``spike_pack_ref`` even on NaN/inf tiles.
 """
 from __future__ import annotations
 
@@ -14,77 +17,51 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import wordpack
 from repro.core.comm_config import BIT_UNITS
-from repro.kernels.quant_pack import ROW_BLOCK, _pack_plane
-
-_EPS = 1e-12
-_NEG = -3.4e38
-_POS = 3.4e38
+from repro.core.spike import spike_quantize
+from repro.kernels.quant_pack import ROW_BLOCK  # noqa: F401  (re-export)
 
 
 def _spike_kernel(x_ref, payload_ref, scale_ref, zero_ref,
                   sval_ref, sidx_ref, *, bits: int, group: int, n: int):
-    x = x_ref[...].astype(jnp.float32)
-    rows = x.shape[0]
-    qmax = float(2 ** bits - 1)
-    g = n // group
-    xg = x.reshape(rows, g, group)
-
-    pos = jnp.arange(group, dtype=jnp.int32)[None, None, :]
-    imin = jnp.argmin(xg, axis=-1)
-    min_mask = pos == imin[..., None]
-    imax = jnp.argmax(jnp.where(min_mask, _NEG, xg), axis=-1)
-    max_mask = pos == imax[..., None]
-    spike_mask = min_mask | max_mask
-
-    vmin = jnp.take_along_axis(xg, imin[..., None], axis=-1)[..., 0]
-    vmax = jnp.take_along_axis(xg, imax[..., None], axis=-1)[..., 0]
-
-    mn = jnp.min(jnp.where(spike_mask, _POS, xg), axis=-1)
-    mx = jnp.max(jnp.where(spike_mask, _NEG, xg), axis=-1)
-    scale_w = jnp.maximum((mx - mn) / qmax, _EPS).astype(jnp.bfloat16)
-    zero_w = mn.astype(jnp.bfloat16)
-    s = scale_w.astype(jnp.float32)[..., None]
-    z = zero_w.astype(jnp.float32)[..., None]
-    filled = jnp.where(spike_mask, mn[..., None], xg)
-    codes = jnp.clip(jnp.round((filled - z) / s), 0.0, qmax)
-    codes = codes.astype(jnp.uint8).reshape(rows, n)
+    rows = x_ref.shape[0]
+    q = spike_quantize(x_ref[...], bits, group)
+    codes = q.codes.reshape(rows, n)
 
     off = 0
-    shift = 0
-    for unit in BIT_UNITS[bits]:
-        mask = (1 << unit) - 1
-        field = (codes >> shift) & mask
+    for unit, plane in wordpack.pack_codes(codes, bits):
         width = n * unit // 8
-        payload_ref[:, off:off + width] = _pack_plane(field, unit, n)
+        payload_ref[:, off:off + width] = plane
         off += width
-        shift += unit
-    scale_ref[...] = scale_w
-    zero_ref[...] = zero_w
-    sval_ref[...] = jnp.stack([vmin, vmax], axis=-1).astype(jnp.bfloat16)
-    sidx_ref[...] = jnp.stack([imin, imax], axis=-1).astype(jnp.int8)
+    scale_ref[...] = q.scale
+    zero_ref[...] = q.zero
+    sval_ref[...] = q.spike_vals
+    sidx_ref[...] = q.spike_idx
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "group", "interpret"))
+                   static_argnames=("bits", "group", "block_rows",
+                                    "interpret"))
 def spike_pack(x: jnp.ndarray, *, bits: int, group: int,
-               interpret: bool = True):
+               block_rows: int | None = None, interpret: bool = True):
     """(R, n) -> (payload, scale, zero, spike_vals (R,G,2), spike_idx)."""
     rows, n = x.shape
-    assert rows % ROW_BLOCK == 0 and n % group == 0
+    block = block_rows or rows
+    assert rows % block == 0 and n % group == 0
     nbytes = sum(n * u // 8 for u in BIT_UNITS[bits])
     g = n // group
-    grid = (rows // ROW_BLOCK,)
+    grid = (rows // block,)
     return pl.pallas_call(
         functools.partial(_spike_kernel, bits=bits, group=group, n=n),
         grid=grid,
-        in_specs=[pl.BlockSpec((ROW_BLOCK, n), lambda r: (r, 0))],
+        in_specs=[pl.BlockSpec((block, n), lambda r: (r, 0))],
         out_specs=[
-            pl.BlockSpec((ROW_BLOCK, nbytes), lambda r: (r, 0)),
-            pl.BlockSpec((ROW_BLOCK, g), lambda r: (r, 0)),
-            pl.BlockSpec((ROW_BLOCK, g), lambda r: (r, 0)),
-            pl.BlockSpec((ROW_BLOCK, g, 2), lambda r: (r, 0, 0)),
-            pl.BlockSpec((ROW_BLOCK, g, 2), lambda r: (r, 0, 0)),
+            pl.BlockSpec((block, nbytes), lambda r: (r, 0)),
+            pl.BlockSpec((block, g), lambda r: (r, 0)),
+            pl.BlockSpec((block, g), lambda r: (r, 0)),
+            pl.BlockSpec((block, g, 2), lambda r: (r, 0, 0)),
+            pl.BlockSpec((block, g, 2), lambda r: (r, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((rows, nbytes), jnp.uint8),

@@ -4,19 +4,27 @@ The earlier kernels (:mod:`repro.kernels.quant_pack`,
 :mod:`repro.kernels.spike_reserve`) stop at raw payload/scale/zero
 tensors; the codec then still had to assemble the metadata sections in
 plain jnp. These kernels go all the way: one grid step reads a
-``(ROW_BLOCK, n)`` float tile from VMEM and writes the full
-``(ROW_BLOCK, wire_bytes(n))`` uint8 wire buffer —
+``(block_rows, n)`` float tile from VMEM and writes the full
+``(block_rows, wire_bytes(n))`` uint8 wire buffer —
 
     [bit-split packed codes | scales | zeros | spike vals | spike idx]
 
-— including the integer-log scale/zero encoding (paper Eq. 1) and the
-spike-reserving metadata (paper Fig. 5c), so the tensor is read from HBM
-exactly once and only wire bytes leave the kernel. The byte layout is
-bit-identical to the pure-jnp reference backend in
-:mod:`repro.core.codec` (enforced by tests/test_backend_equality.py).
+— every section written straight into its
+:meth:`repro.core.comm_config.CommConfig.wire_layout` slice of the
+output ref (no ``jnp.concatenate`` staging), including the integer-log
+scale/zero encoding (paper Eq. 1, transcendental-free exponent
+arithmetic) and the spike-reserving metadata (paper Fig. 5c). The tensor
+is read from HBM exactly once and only wire bytes leave the kernel.
 
-The decode kernel is the exact inverse: wire tile in, float tile out,
-with spikes scattered back to their recorded in-group positions.
+The kernel bodies are :mod:`repro.core.tilecodec` — the same functions
+the pure-jnp reference backend runs — so the byte layout is identical to
+:mod:`repro.core.codec` by construction (enforced anyway by
+tests/test_backend_equality.py and the golden vectors).
+
+``block_rows`` is picked by the dispatchers in :mod:`repro.kernels.ops`
+from the tile size (whole-array single grid step off-TPU; VMEM-budgeted
+multiple of 8 sublanes on TPU) instead of the old fixed 8-row blocks
+that forced a re-pad and an 8x-deeper grid on every call.
 """
 from __future__ import annotations
 
@@ -26,171 +34,49 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import scale_codec
-from repro.core.comm_config import BIT_UNITS, CommConfig
-from repro.core.quant import dequantize, quantize
-from repro.core.spike import SpikeQuant, spike_dequantize, spike_quantize
-from repro.kernels.dequant_unpack import _unpack_plane
-from repro.kernels.quant_pack import ROW_BLOCK, _pack_plane
+from repro.core.comm_config import CommConfig
+# Shared tile bodies (re-exported: the RDMA kernels and the emulation
+# import them from here so all fused call sites read as one module).
+from repro.core.tilecodec import (decode_tile, encode_tile,  # noqa: F401
+                                  encode_tile_into, tile_kwargs)
+
+_cfg_kw = tile_kwargs
 
 
 # ---------------------------------------------------------------------------
-# in-kernel helpers (jnp-level; lowered per backend by pallas).
-# The quantizers and the scale/zero log codec are the repro.core functions
-# themselves — pure jnp, so they run unchanged inside the kernel and the
-# two backends cannot drift apart.
+# encode: float tile -> wire tile (sections written at layout offsets)
 # ---------------------------------------------------------------------------
 
-def _meta_to_bytes(m: jnp.ndarray) -> jnp.ndarray:
-    """(R, k) 2-byte meta dtype -> (R, 2k) uint8, little-endian pairs."""
-    b = jax.lax.bitcast_convert_type(m, jnp.uint8)        # (R, k, 2)
-    return b.reshape(m.shape[0], -1)
-
-
-def _bytes_to_meta(b: jnp.ndarray, dtype, k: int) -> jnp.ndarray:
-    """(R, 2k) uint8 -> (R, k) 2-byte meta dtype."""
-    return jax.lax.bitcast_convert_type(
-        b.reshape(b.shape[0], k, 2), jnp.dtype(dtype))
-
-
-def _encode_scale_bytes(scale: jnp.ndarray, theta: int) -> jnp.ndarray:
-    return jax.lax.bitcast_convert_type(
-        scale_codec.encode_scale(scale, theta), jnp.uint8)
-
-
-def _decode_scale_bytes(b: jnp.ndarray, theta: int) -> jnp.ndarray:
-    return scale_codec.decode_scale(
-        jax.lax.bitcast_convert_type(b, jnp.int8), theta)
-
-
-# ---------------------------------------------------------------------------
-# shared tile bodies
-#
-# ``encode_tile`` / ``decode_tile`` are the complete per-tile kernel bodies
-# as pure (R, n) <-> (R, wire_bytes) array functions. They are shared by
-# three call sites that must stay byte-lockstep: the codec kernels below,
-# the fused RDMA AllReduce phase kernels (repro.kernels.rdma_allreduce)
-# and their CPU emulation (repro.kernels.emulate).
-# ---------------------------------------------------------------------------
-
-def encode_tile(x: jnp.ndarray, *, bits: int, group: int, n: int,
-                spike: bool, scale_int: bool, theta: int,
-                meta_dtype) -> jnp.ndarray:
-    """(R, n) float tile -> (R, wire_bytes(n)) uint8 wire tile."""
-    rows = x.shape[0]
-    g = n // group
-
-    if spike:
-        q = spike_quantize(x, bits, group, meta_dtype)
-        codes, scale_w, zero_w = q.codes, q.scale, q.zero
-    else:
-        codes, scale_w, zero_w = quantize(x, bits, group, meta_dtype)
-    codes = codes.reshape(rows, n)
-
-    parts = []
-    shift = 0
-    for unit in BIT_UNITS[bits]:                          # bit splitting
-        field = (codes >> shift) & ((1 << unit) - 1)
-        parts.append(_pack_plane(field, unit, n))
-        shift += unit
-
-    if scale_int:                                         # paper Eq. 1
-        parts.append(_encode_scale_bytes(scale_w, theta))
-        parts.append(scale_codec.encode_signed(zero_w, theta))
-    else:
-        parts.append(_meta_to_bytes(scale_w))
-        parts.append(_meta_to_bytes(zero_w))
-
-    if spike:                                             # paper Fig. 5c
-        sv = q.spike_vals.reshape(rows, 2 * g)            # exact bf16
-        parts.append(_meta_to_bytes(sv))
-        si = q.spike_idx.reshape(rows, 2 * g)
-        if scale_int:                                     # int8 indices
-            parts.append(jax.lax.bitcast_convert_type(si, jnp.uint8))
-        else:                                             # bf16 baseline
-            parts.append(_meta_to_bytes(si.astype(meta_dtype)))
-    return jnp.concatenate(parts, axis=-1)
-
-
-def decode_tile(wire: jnp.ndarray, *, bits: int, group: int, n: int,
-                spike: bool, scale_int: bool, theta: int, meta_dtype,
-                out_dtype) -> jnp.ndarray:
-    """(R, wire_bytes(n)) uint8 wire tile -> (R, n) out_dtype tile."""
-    rows = wire.shape[0]
-    g = n // group
-
-    codes = jnp.zeros((rows, n), jnp.uint8)
-    off = 0
-    shift = 0
-    for unit in BIT_UNITS[bits]:
-        width = n * unit // 8
-        field = _unpack_plane(wire[:, off:off + width], unit, n)
-        codes = codes | ((field.astype(jnp.uint32) << shift)
-                         .astype(jnp.uint8))
-        off += width
-        shift += unit
-
-    if scale_int:
-        scale = _decode_scale_bytes(wire[:, off:off + g], theta)
-        off += g
-        zero = scale_codec.decode_signed(wire[:, off:off + g], theta)
-        off += g
-    else:
-        scale = _bytes_to_meta(wire[:, off:off + 2 * g], meta_dtype, g)
-        off += 2 * g
-        zero = _bytes_to_meta(wire[:, off:off + 2 * g], meta_dtype, g)
-        off += 2 * g
-
-    codes = codes.reshape(rows, g, group)
-    if spike:
-        sv = _bytes_to_meta(wire[:, off:off + 4 * g], meta_dtype, 2 * g)
-        off += 4 * g
-        if scale_int:
-            si = jax.lax.bitcast_convert_type(
-                wire[:, off:off + 2 * g], jnp.int8)
-        else:
-            si = _bytes_to_meta(wire[:, off:off + 4 * g],
-                                meta_dtype, 2 * g).astype(jnp.int8)
-        q = SpikeQuant(codes, scale, zero,
-                       sv.reshape(rows, g, 2), si.reshape(rows, g, 2))
-        return spike_dequantize(q, out_dtype)
-    return dequantize(codes, scale, zero, out_dtype)
-
-
-# ---------------------------------------------------------------------------
-# encode: float tile -> wire tile
-# ---------------------------------------------------------------------------
-
-def _encode_kernel(x_ref, wire_ref, *, bits: int, group: int, n: int,
-                   spike: bool, scale_int: bool, theta: int, meta_dtype):
-    wire_ref[...] = encode_tile(
-        x_ref[...], bits=bits, group=group, n=n, spike=spike,
-        scale_int=scale_int, theta=theta, meta_dtype=meta_dtype)
+def _encode_kernel(x_ref, wire_ref, *, kw):
+    encode_tile_into(x_ref[...], wire_ref, **kw)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "group", "spike", "scale_int",
-                                    "theta", "meta_dtype", "interpret"))
+                                    "theta", "meta_dtype", "block_rows",
+                                    "interpret"))
 def encode_wire(x: jnp.ndarray, *, bits: int, group: int, spike: bool,
                 scale_int: bool, theta: int = 10,
-                meta_dtype: str = "bfloat16", interpret: bool = True):
+                meta_dtype: str = "bfloat16", block_rows: int | None = None,
+                interpret: bool = True):
     """(R, n) float -> (R, wire_bytes(n)) uint8 complete wire buffer.
 
-    R must be a multiple of ROW_BLOCK (wrapper in ops.py pads).
+    R must be a multiple of ``block_rows`` (default: one grid step over
+    the whole array; the wrappers in ops.py pad and pick the block).
     """
     rows, n = x.shape
-    assert rows % ROW_BLOCK == 0 and n % group == 0
+    block = block_rows or rows
+    assert rows % block == 0 and n % group == 0
     cfg = CommConfig(bits=bits, group=group, spike=spike,
                      scale_int=scale_int, theta=theta, meta_dtype=meta_dtype)
     wb = cfg.wire_bytes(n)
-    grid = (rows // ROW_BLOCK,)
+    kw = _cfg_kw(cfg, n)
+    grid = (rows // block,)
     return pl.pallas_call(
-        functools.partial(_encode_kernel, bits=bits, group=group, n=n,
-                          spike=spike, scale_int=scale_int, theta=theta,
-                          meta_dtype=jnp.dtype(meta_dtype)),
+        functools.partial(_encode_kernel, kw=kw),
         grid=grid,
-        in_specs=[pl.BlockSpec((ROW_BLOCK, n), lambda r: (r, 0))],
-        out_specs=[pl.BlockSpec((ROW_BLOCK, wb), lambda r: (r, 0))],
+        in_specs=[pl.BlockSpec((block, n), lambda r: (r, 0))],
+        out_specs=[pl.BlockSpec((block, wb), lambda r: (r, 0))],
         out_shape=[jax.ShapeDtypeStruct((rows, wb), jnp.uint8)],
         interpret=interpret,
     )(x)[0]
@@ -200,39 +86,34 @@ def encode_wire(x: jnp.ndarray, *, bits: int, group: int, spike: bool,
 # decode: wire tile -> float tile
 # ---------------------------------------------------------------------------
 
-def _decode_kernel(wire_ref, out_ref, *, bits: int, group: int, n: int,
-                   spike: bool, scale_int: bool, theta: int, meta_dtype,
-                   out_dtype):
-    out_ref[...] = decode_tile(
-        wire_ref[...], bits=bits, group=group, n=n, spike=spike,
-        scale_int=scale_int, theta=theta, meta_dtype=meta_dtype,
-        out_dtype=out_dtype)
+def _decode_kernel(wire_ref, out_ref, *, kw, out_dtype):
+    out_ref[...] = decode_tile(wire_ref[...], out_dtype=out_dtype, **kw)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "group", "n", "spike",
                                     "scale_int", "theta", "meta_dtype",
-                                    "out_dtype", "interpret"))
+                                    "out_dtype", "block_rows", "interpret"))
 def decode_wire(buf: jnp.ndarray, *, bits: int, group: int, n: int,
                 spike: bool, scale_int: bool, theta: int = 10,
                 meta_dtype: str = "bfloat16", out_dtype=jnp.float32,
-                interpret: bool = True):
+                block_rows: int | None = None, interpret: bool = True):
     """(R, wire_bytes(n)) uint8 -> (R, n) out_dtype. Inverse of encode."""
     rows = buf.shape[0]
-    assert rows % ROW_BLOCK == 0
+    block = block_rows or rows
+    assert rows % block == 0
     cfg = CommConfig(bits=bits, group=group, spike=spike,
                      scale_int=scale_int, theta=theta, meta_dtype=meta_dtype)
     wb = cfg.wire_bytes(n)
     assert buf.shape == (rows, wb), (buf.shape, (rows, wb))
-    grid = (rows // ROW_BLOCK,)
+    kw = _cfg_kw(cfg, n)
+    grid = (rows // block,)
     return pl.pallas_call(
-        functools.partial(_decode_kernel, bits=bits, group=group, n=n,
-                          spike=spike, scale_int=scale_int, theta=theta,
-                          meta_dtype=jnp.dtype(meta_dtype),
+        functools.partial(_decode_kernel, kw=kw,
                           out_dtype=jnp.dtype(out_dtype)),
         grid=grid,
-        in_specs=[pl.BlockSpec((ROW_BLOCK, wb), lambda r: (r, 0))],
-        out_specs=[pl.BlockSpec((ROW_BLOCK, n), lambda r: (r, 0))],
+        in_specs=[pl.BlockSpec((block, wb), lambda r: (r, 0))],
+        out_specs=[pl.BlockSpec((block, n), lambda r: (r, 0))],
         out_shape=[jax.ShapeDtypeStruct((rows, n), jnp.dtype(out_dtype))],
         interpret=interpret,
     )(buf)[0]

@@ -1,0 +1,45 @@
+"""Benchmark regression guard as a (slow-marked) test.
+
+Runs the collective-level bench at smoke shapes and compares against the
+committed ``benchmarks/results/collectives.json`` with the tolerance in
+``benchmarks.bench_collectives`` — the same check the CI smoke-bench
+lane runs via ``bench_collectives.py --check``. Full benches
+(``benchmarks/run.py`` without ``--fast``) stay manual; this wrapper is
+marked ``slow`` so tier-1 feedback is unaffected.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from benchmarks import bench_collectives as bc  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+
+def test_collectives_within_tolerance_of_committed():
+    rows = bc.run(fast=True)
+    assert rows, "bench produced no rows"
+    regs = bc.check_regressions(rows)
+    assert not regs, f"collective bench regressions: {regs}"
+
+
+def test_check_flags_planted_regression(tmp_path):
+    """The guard actually fires: a fresh row 2x over its committed
+    value must be reported."""
+    import json
+
+    committed = [{"scheme": "two_step", "bits": 8, "n": 16384,
+                  "value": 1000.0}]
+    p = tmp_path / "collectives.json"
+    p.write_text(json.dumps(committed))
+    fresh = [{"scheme": "two_step", "bits": 8, "n": 16384,
+              "value": 1000.0 * 2 + bc.CHECK_ABS_FLOOR_US}]
+    regs = bc.check_regressions(fresh, committed_path=str(p))
+    assert len(regs) == 1
+    # within tolerance: no trip
+    fresh[0]["value"] = 1100.0
+    assert not bc.check_regressions(fresh, committed_path=str(p))

@@ -39,6 +39,37 @@ def test_bit_units_cover_all_widths():
         assert all(u in (1, 2, 4, 8) for u in units)
 
 
+@settings(max_examples=60, deadline=None)
+@given(bits=st.sampled_from([1, 2, 3, 4, 5, 6, 7, 8]),
+       n=st.sampled_from([1, 3, 7, 13, 37, 131, 250, 256]),
+       lead=st.sampled_from([(), (3,), (2, 5)]),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip_odd_shapes(bits, n, lead, seed):
+    """Widths 1-8 round-trip exactly over odd (non-multiple-of-8) tails
+    and odd leading shapes: pack zero-pads each plane's tail lanes and
+    unpack slices them back off (the former dead `[..., :n]` path)."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2 ** bits, size=(*lead, n), dtype=np.uint8)
+    packed = bitsplit.pack(jnp.asarray(codes), bits)
+    assert packed.shape == (*lead, bitsplit.packed_nbytes(n, bits))
+    back = bitsplit.unpack(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(unit=st.sampled_from([1, 2, 4, 8]),
+       n=st.sampled_from([1, 2, 5, 9, 17, 63, 64]),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_pack_unit_roundtrip_tails(unit, n, seed):
+    """Single-plane pack/unpack at every unit width over ragged tails."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 2 ** unit, size=(2, n), dtype=np.uint8)
+    packed = bitsplit.pack_unit(jnp.asarray(vals), unit)
+    assert packed.shape[-1] == (n * unit + 7) // 8
+    back = bitsplit.unpack_unit(packed, unit, n)
+    np.testing.assert_array_equal(np.asarray(back), vals)
+
+
 # ---------------------------------------------------------------------------
 # RTN quantization error bound
 # ---------------------------------------------------------------------------

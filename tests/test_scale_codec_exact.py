@@ -1,0 +1,139 @@
+"""Bit-identity wall for the transcendental-free Eq.-1 scale codec.
+
+The rewrite (exponent extraction + exact per-theta mantissa-threshold /
+2^(r/theta) tables, integer/VPU ops only) claims *exact* equality with
+the mathematical spec ``floor(log2(s) * theta)`` / ``2^(code/theta)``.
+Float64 log2/exp2 is the reference here: for float32 inputs the spec's
+boundary points 2^(k/theta) are irrational (except exact powers of two,
+which both sides handle exactly), so the float64 rounding error (~1e-16
+relative) can never flip a floor/compare whose operands are >= ~4e-7
+apart — the float64 reference IS the exact spec on this domain.
+
+Swept exhaustively: all 256 codes (both decoders), a dense float grid
+over the full normal range plus subnormal/clamp/zero/sign edges (both
+encoders), for theta in {5, 10, 20} (and the config default 10's
+neighbours used elsewhere in the tests).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import scale_codec
+
+THETAS = [5, 10, 20]
+_LOG_BIAS = 64
+_MAG_MIN = 1e-20
+
+
+# ---------------------------------------------------------------------------
+# float64 reference implementations (the spec)
+# ---------------------------------------------------------------------------
+
+def _ftz(x):
+    """Flush float32 subnormals to (signed) zero, as XLA's CPU/TPU
+    backends do before the codec ever sees the value; numpy float64
+    math would otherwise keep them and diverge on the sign bit."""
+    tiny = np.finfo(np.float32).tiny
+    return np.where(np.abs(x) < tiny, np.copysign(np.float32(0.0), x),
+                    x).astype(np.float32)
+
+
+def ref_encode_scale(s, theta):
+    s = np.maximum(s.astype(np.float64), _MAG_MIN)
+    code = np.floor(np.log2(s) * theta)
+    return np.clip(code, -128, 127).astype(np.int8)
+
+
+def ref_decode_scale(code, theta):
+    return np.exp2(code.astype(np.float64) / theta).astype(np.float32)
+
+
+def ref_encode_signed(x, theta):
+    xf = _ftz(x).astype(np.float64)
+    sign = (xf < 0).astype(np.uint8)
+    mag = np.maximum(np.abs(xf), _MAG_MIN)
+    code = np.floor(np.log2(mag) * theta) + _LOG_BIAS
+    out = np.clip(code, 1, 127).astype(np.uint8)
+    out = np.where(code < 1, np.uint8(0), out)
+    return (sign << 7) | out
+
+
+def ref_decode_signed(code, theta):
+    sign = np.where((code >> 7) > 0, -1.0, 1.0)
+    mag_code = (code & 0x7F).astype(np.float64)
+    mag = np.exp2((mag_code - _LOG_BIAS) / theta)
+    mag = np.where(mag_code == 0, 0.0, mag)
+    return (sign * mag).astype(np.float32)
+
+
+def _dense_grid():
+    """Dense positive float32 grid incl. subnormal/clamp/edge values."""
+    rng = np.random.default_rng(20250802)
+    parts = [
+        # log-uniform across the entire normal range (clamps both ends)
+        np.exp(rng.uniform(np.log(1e-38), np.log(1e38), 200_000)),
+        # dense around 1.0 where the theta thresholds live
+        np.exp2(rng.uniform(-1.5, 1.5, 200_000)),
+        # exact powers of two (the only exact floor boundaries)
+        np.exp2(np.arange(-126, 128).astype(np.float64)),
+        # subnormals, zero, extremes
+        np.array([0.0, 1e-45, 1e-40, 5e-39, np.finfo(np.float32).tiny,
+                  np.finfo(np.float32).max, 1e-20, 2e-20, 1e20]),
+    ]
+    return np.concatenate(parts).astype(np.float32)
+
+
+@pytest.mark.parametrize("theta", THETAS)
+def test_encode_scale_bit_identical(theta):
+    s = _dense_grid()
+    got = np.asarray(scale_codec.encode_scale(jnp.asarray(s), theta))
+    np.testing.assert_array_equal(got, ref_encode_scale(s, theta))
+
+
+@pytest.mark.parametrize("theta", THETAS)
+def test_decode_scale_bit_identical_all_codes(theta):
+    codes = np.arange(-128, 128, dtype=np.int64).astype(np.int8)
+    got = np.asarray(scale_codec.decode_scale(jnp.asarray(codes), theta))
+    np.testing.assert_array_equal(got, ref_decode_scale(codes, theta))
+
+
+@pytest.mark.parametrize("theta", THETAS)
+def test_encode_signed_bit_identical(theta):
+    s = _dense_grid()
+    x = np.concatenate([s, -s, np.array([0.0, -0.0], np.float32)])
+    got = np.asarray(scale_codec.encode_signed(jnp.asarray(x), theta))
+    np.testing.assert_array_equal(got, ref_encode_signed(x, theta))
+
+
+@pytest.mark.parametrize("theta", THETAS)
+def test_decode_signed_bit_identical_all_codes(theta):
+    codes = np.arange(0, 256, dtype=np.int64).astype(np.uint8)
+    got = np.asarray(scale_codec.decode_signed(jnp.asarray(codes), theta))
+    np.testing.assert_array_equal(got, ref_decode_signed(codes, theta))
+
+
+@pytest.mark.parametrize("theta", THETAS)
+def test_roundtrip_error_bound(theta):
+    """floor-in-log2 quantization: decode(encode(s)) in (2^(-1/theta), 1]*s
+    inside the clamp-free band."""
+    lo, hi = 2.0 ** (-100.0 / theta), 2.0 ** (100.0 / theta)
+    rng = np.random.default_rng(7)
+    s = np.exp(rng.uniform(np.log(lo), np.log(hi), 50_000)) \
+        .astype(np.float32)
+    back = np.asarray(scale_codec.decode_scale(
+        scale_codec.encode_scale(jnp.asarray(s), theta), theta))
+    ratio = back / s
+    assert np.all(ratio <= 1.0 + 1e-3)
+    assert np.all(ratio >= 2 ** (-1.0 / theta) * (1 - 1e-3))
+
+
+def test_no_transcendentals_on_hot_path():
+    """Grep-level guard: the codec module must not call log2/exp2 (the
+    per-theta tables are exact integer arithmetic at import time)."""
+    import inspect
+
+    src = inspect.getsource(scale_codec)
+    for name in ("jnp.log2", "jnp.exp2", "lax.log2", "lax.exp2",
+                 "np.log2", "np.exp2", "math.log2", "math.exp2",
+                 "jnp.log(", "jnp.exp("):
+        assert name not in src, f"{name} found on scale codec hot path"
