@@ -49,8 +49,8 @@ def _worker(fast: bool):
     from jax.sharding import PartitionSpec as P
 
     from repro import compat
-    from repro.core import (compressed_psum, default_comm_config,
-                            dispatch_all_to_all)
+    from repro.core import (compressed_psum, compressed_psum_ef,
+                            default_comm_config, dispatch_all_to_all)
     from repro.launch.mesh import make_test_mesh
 
     rows = []
@@ -87,6 +87,23 @@ def _worker(fast: bool):
         x = jax.random.normal(jax.random.PRNGKey(0), (dev, n), jnp.float32)
         return jax.jit(f), x
 
+    def ef_case(cfg, n):
+        # error-feedback grad AR over the single pod axis (the
+        # train_step cross-pod sync path: two-step + residual
+        # re-injection + both-stage error capture) — the rows track EF
+        # overhead vs the plain compressed psum at 2/4 bit
+        @functools.partial(compat.shard_map, mesh=mesh,
+                           in_specs=(P(("pod", "data", "model")),) * 2,
+                           out_specs=P(("pod", "data", "model")),
+                           check_vma=False)
+        def f(xs, es):
+            out, res = compressed_psum_ef(xs[0], es[0], ("pod",), cfg)
+            return jnp.stack([out, res])[None]
+
+        x = jax.random.normal(jax.random.PRNGKey(2), (dev, n), jnp.float32)
+        e = jnp.zeros_like(x)
+        return jax.jit(lambda v: f(v, e)), x
+
     def a2a_case(cfg, n):
         # MoE-dispatch shape: tp per-peer blocks of n/tp values, d=512
         d = 512
@@ -118,6 +135,10 @@ def _worker(fast: bool):
                 cfg = default_comm_config(bits, scheme=scheme)
                 add(f"{scheme}@{bits}", bits, cfg,
                     *ar_case(cfg, ("model", "pod"), n), cfg.wire_bytes(n))
+        for bits in (4, 2):   # EF gradient sync: the sub-4-bit regime
+            cfg = default_comm_config(bits)
+            add(f"grad_ef@{bits}", bits, cfg, *ef_case(cfg, n),
+                cfg.wire_bytes(n))
         cfg = default_comm_config(8, scheme="nccl")
         add("a2a_nccl", 32, cfg, *a2a_case(cfg, n), 4 * n)
         for bits in BITS:

@@ -15,7 +15,8 @@ from repro.core.comm_config import (  # noqa: F401
     default_comm_config)
 from repro.core import bitsplit, codec, quant, scale_codec, spike  # noqa: F401
 from repro.core.collectives import (  # noqa: F401
-    compressed_psum, dispatch_all_to_all, grad_all_reduce,
-    hierarchical_all_reduce, pipelined_hierarchical_all_reduce,
-    quantized_all_gather, quantized_all_reduce, quantized_all_to_all,
-    quantized_reduce_scatter)
+    compressed_psum, compressed_psum_ef, dispatch_all_to_all,
+    grad_all_reduce, hierarchical_all_reduce,
+    pipelined_hierarchical_all_reduce, quantized_all_gather,
+    quantized_all_reduce, quantized_all_to_all,
+    quantized_reduce_scatter, quantized_reduce_scatter_ef)

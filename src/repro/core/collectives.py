@@ -299,7 +299,19 @@ def pipelined_hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str,
 def _flat_all_reduce(xf: jnp.ndarray, axes: Sequence[str],
                      cfg: CommConfig) -> jnp.ndarray:
     """Dispatch on scheme for a padded flat vector over (inner[, outer])."""
-    if cfg.scheme in ("two_step", "fused") or len(axes) == 1:
+    if len(axes) == 1:
+        # Single axis: no (inner, outer) split exists, so "hierarchical"
+        # degenerates to the two-step itself; "hier_pp" keeps its
+        # pipelining by feeding the microchunks through ONE batched
+        # two-step schedule (collectives batch over leading dims) — this
+        # is how hier_pp grad policies keep their pipelined schedule on
+        # the already-reduce-scattered single pod axis (train_step).
+        if cfg.scheme == "hier_pp":
+            chunks = max(1, cfg.pipeline_chunks)
+            out = quantized_all_reduce(xf.reshape(chunks, -1), axes[0], cfg)
+            return out.reshape(xf.shape)
+        return quantized_all_reduce(xf, axes[0], cfg)
+    if cfg.scheme in ("two_step", "fused"):
         out = xf
         for ax in axes:  # sequential two-step per axis
             out = quantized_all_reduce(out, ax, cfg)
@@ -373,6 +385,176 @@ def _psum_bwd(axes, cfg, groups, bwd_cfg, res, g):
 
 
 compressed_psum.defvjp(_psum_fwd, _psum_bwd)
+
+
+# --------------------------------------------------------------------------
+# error-feedback (EF21 / 1-bit-LAMB style) compressed collectives
+# --------------------------------------------------------------------------
+
+def _local_qdq_error(xe_flat: jnp.ndarray, cfg: CommConfig,
+                     mult: int) -> jnp.ndarray:
+    """This rank's phase-1 quantization error of a flat vector.
+
+    Every AR/RS schedule chunks the padded flat vector into contiguous
+    rows and encodes each row with ``cfg.group``-sized groups, so the
+    group boundaries of a flat QDQ over the same padding are identical
+    to the ones the collective's first quantization actually used — the
+    captured residual is exactly the phase-1 error. (The two-step's
+    phase-2 re-quantization of the *summed* partials is a shared error
+    across ranks and is deliberately not fed back.)
+    """
+    xp = _pad_to(xe_flat, mult)
+    err = xp - codec.qdq_wire(xp, cfg)
+    return err[:xe_flat.shape[0]]
+
+
+def _ef_two_step(xe_flat: jnp.ndarray, axis: str, cfg: CommConfig):
+    """Single-axis two-step AR on a padded flat vector with FULL error
+    capture: ``(xe) -> (out, residual)``.
+
+    The two-step quantizes twice — each rank's input chunks (phase 1)
+    and the summed partials before the all_gather (phase 2). Phase-1
+    error is local by construction; phase-2 error is known exactly at
+    the rank that owns the chunk (it holds both ``partial`` and its
+    dequantized broadcast), so folding it into that rank's residual at
+    its own chunk position makes the per-step residuals *sum across
+    ranks to the AR's entire error*:
+
+        sum_r residual_r = sum_r err1_r (all chunks) + sum_c err2_c
+
+    i.e. next step's psum of ``x + residual`` re-injects every bit the
+    wire dropped — the strongest EF the schedule admits. Leading batch
+    dims pipeline through one schedule (the hier_pp microchunk path).
+    """
+    tp = compat.axis_size(axis)
+    lead = xe_flat.shape[:-1]
+    b = len(lead)
+    m = xe_flat.shape[-1]
+    xc = xe_flat.reshape(*lead, tp, m // tp)
+    wire = codec.encode(xc, cfg)
+    err1 = xc - codec.decode(wire, cfg, m // tp)         # phase-1, mine
+    recv = lax.all_to_all(wire, axis, b, b, tiled=True)
+    parts = codec.decode(recv, cfg, m // tp)
+    partial = jnp.sum(parts, axis=b)                     # my chunk's sum
+    wire2 = codec.encode(partial, cfg)
+    err2 = partial - codec.decode(wire2, cfg, m // tp)   # phase-2, mine
+    allw = lax.all_gather(wire2, axis, axis=b)
+    out = codec.decode(allw, cfg, m // tp).reshape(*lead, m)
+    own = (jnp.arange(tp) == lax.axis_index(axis))[:, None]
+    res = (err1 + own * err2[..., None, :]).reshape(*lead, m)
+    return out, res
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def compressed_psum_ef(x: jnp.ndarray, residual: jnp.ndarray, axes: tuple,
+                       cfg: CommConfig, groups=None):
+    """Error-feedback ``compressed_psum``: ``(x, residual_in) ->
+    (out, residual_out)``.
+
+    Each step adds the previous step's local quantization error back in
+    before compressing (``xe = x + residual``), runs the configured
+    quantized AR on ``xe``, and returns the error the wire dropped for
+    the caller to carry to the next step (SDP4Bit / EF21: the bias of
+    low-bit gradient compression becomes a *bounded* residual instead
+    of an accumulating drift, which is what lets the grad site run at
+    2-4 bits and still converge).
+
+    On a single axis with the XLA schedules the residual captures BOTH
+    quantization stages of the two-step (see :func:`_ef_two_step`) —
+    the per-rank residuals sum to the AR's entire error. Multi-axis /
+    grouped / fused runs fall back to phase-1-only capture (the local
+    QDQ error), which is the part a rank can know by itself there.
+
+    ``residual`` has ``x``'s shape and should start at zeros. With the
+    site disabled (or scheme ``"nccl"``) the psum is exact and the
+    residual passes through unchanged (zeros stay zeros).
+    """
+    if not cfg.enabled or cfg.scheme == "nccl":
+        out = x
+        for ax in axes:
+            out = lax.psum(out, ax, axis_index_groups=groups)
+        return out, residual
+    shape = x.shape
+    n = 1
+    for s in shape:
+        n *= s
+    xe = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    if len(axes) == 1 and groups is None and \
+            cfg.scheme in ("two_step", "hierarchical", "hier_pp"):
+        tp = compat.axis_size(axes[0])
+        chunks = cfg.pipeline_chunks if cfg.scheme == "hier_pp" else 1
+        xf = _pad_to(xe.reshape(-1), tp * cfg.group * chunks)
+        if chunks > 1:          # hier_pp: batched microchunk pipeline
+            xf = xf.reshape(chunks, xf.shape[0] // chunks)
+        out, res = _ef_two_step(xf, axes[0], cfg)
+        return (out.reshape(-1)[:n].reshape(shape).astype(x.dtype),
+                res.reshape(-1)[:n].reshape(shape).astype(residual.dtype))
+    out = compressed_psum(xe, axes, cfg, groups)
+    sizes = [len(groups[0])] if groups is not None \
+        else [compat.axis_size(a) for a in axes]
+    chunks = cfg.pipeline_chunks if cfg.scheme == "hier_pp" else 1
+    mult = cfg.group * chunks
+    for s in sizes:
+        mult *= s
+    new_res = _local_qdq_error(xe.reshape(-1), cfg, mult).reshape(shape)
+    return out.astype(x.dtype), new_res.astype(residual.dtype)
+
+
+def _psum_ef_fwd(x, residual, axes, cfg, groups):
+    return compressed_psum_ef(x, residual, axes, cfg, groups), None
+
+
+def _psum_ef_bwd(axes, cfg, groups, res, g):
+    del res
+    g_out, _ = g      # the residual output is state, not a loss path
+    out = g_out
+    for ax in axes:
+        out = lax.psum(out, ax, axis_index_groups=groups)
+    # out = psum(x + residual) straight-through; the residual output is
+    # x + r - QDQ(x + r), whose straight-through Jacobian is zero — the
+    # exact transpose used everywhere else in this module.
+    return out, out
+
+
+compressed_psum_ef.defvjp(_psum_ef_fwd, _psum_ef_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def quantized_reduce_scatter_ef(x: jnp.ndarray, residual: jnp.ndarray,
+                                axis: str, cfg: CommConfig):
+    """Error-feedback quantized RS: ``(x (..., n), residual (..., n)) ->
+    (chunk (..., n/tp), residual_out (..., n))``.
+
+    Same contract as :func:`compressed_psum_ef` for the scatter-shaped
+    ZeRO++ gradient site: the residual lives at the *input* (full n)
+    shape, the output is this rank's summed chunk. Alignment contract
+    matches :func:`quantized_reduce_scatter` (``n % tp == 0``,
+    ``(n/tp) % group == 0``).
+    """
+    if not cfg.enabled or cfg.scheme == "nccl":
+        out = lax.psum_scatter(x, axis, scatter_dimension=x.ndim - 1,
+                               tiled=True)
+        return out, residual
+    xe = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    out = quantized_reduce_scatter(xe, axis, cfg)
+    # alignment contract makes the flat QDQ's groups identical to the
+    # (tp, n/tp)-chunked encode the RS ran — no padding needed
+    err = xe - codec.qdq_wire(xe, cfg)
+    return out.astype(x.dtype), err.astype(residual.dtype)
+
+
+def _qrs_ef_fwd(x, residual, axis, cfg):
+    return quantized_reduce_scatter_ef(x, residual, axis, cfg), None
+
+
+def _qrs_ef_bwd(axis, cfg, res, g):
+    del res
+    g_out, _ = g
+    ag = lax.all_gather(g_out, axis, axis=g_out.ndim - 1, tiled=True)
+    return ag, ag
+
+
+quantized_reduce_scatter_ef.defvjp(_qrs_ef_fwd, _qrs_ef_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))

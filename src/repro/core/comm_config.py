@@ -141,6 +141,22 @@ class CommConfig:
         """Same config routed through a different collective schedule."""
         return dataclasses.replace(self, scheme=scheme)
 
+    def with_bits(self, bits: int) -> "CommConfig":
+        """Same transport at a different width, paper-default adjusted.
+
+        Group size and spike reserving follow the paper's Setup rules
+        for the new width (g128 for >=5 bits, g32 + spike-at-INT2
+        below), while the transport knobs (scheme, backend, scale_int,
+        theta, pipeline_chunks, meta_dtype) carry over — the substrate
+        of depth-interpolated schedules. Only touches quantization
+        fields, so it commutes with ``with_backend`` / ``with_scheme``.
+        """
+        if bits >= 5:
+            return dataclasses.replace(self, bits=bits, group=128,
+                                       spike=False)
+        return dataclasses.replace(self, bits=bits, group=32,
+                                   spike=bits <= 2)
+
     # ----- wire-size accounting (exact; used by Table 4/5 benches too) ---
 
     def wire_layout(self, n: int) -> WireLayout:

@@ -1,41 +1,258 @@
-"""CommPolicy: which paper technique applies at which communication site.
+"""Site-addressable policy engine: which paper technique applies where.
 
 The paper's sites (+ our beyond-paper extension):
-  tp    — TP AllReduce of activations (attention out / MLP down partial
-          sums, embedding psum)            [paper Tables 1, 7, 9]
-  a2a   — MoE dispatch All2All payload (combine stays BF16, following
-          DeepSeek-V3 as the paper does)   [paper Tables 2, 8, 10]
-  grad  — gradient AllReduce across pods (hierarchical two-step over the
-          slow bridge)                     [paper Figs. 6-8, Table 5]
-  qag   — FSDP/ZeRO-3 weight all-gather    [beyond paper: ZeRO++-style]
+  tp       — TP AllReduce of activations (attention out / MLP down partial
+             sums, embedding psum)            [paper Tables 1, 7, 9]
+  a2a      — MoE dispatch All2All payload (combine stays BF16, following
+             DeepSeek-V3 as the paper does)   [paper Tables 2, 8, 10]
+  grad     — gradient AllReduce across pods (hierarchical two-step over
+             the slow bridge)                 [paper Figs. 6-8, Table 5]
+  qag      — FSDP/ZeRO-3 weight all-gather    [beyond paper: ZeRO++-style]
+  qgrad_rs — ZeRO++-style quantized gradient reduce-scatter
+  tp_bwd   — backward-pass TP cotangent compression
+
+The paper fixes one bit width per site, but accuracy sensitivity varies
+sharply by layer (Dong et al. reach ~3.3 avg bits only via per-layer
+allocation). A :class:`CommPolicy` therefore no longer holds one
+``CommConfig`` per site: each site holds a :class:`Schedule` that
+resolves ``(site, layer_index) -> CommConfig``. Schedules are
+declarative (uniform / first-last-K-high / explicit per-layer lists /
+depth-interpolated widths), serialize to/from JSON (policies become
+config artifacts — see ``configs/policies/``), and stay hashable so
+resolved configs can flow into jit static args.
+
+Everything below the resolver is untouched: a given ``CommConfig``
+produces the same wire bytes it always did — the engine only changes
+*which* config binds at each ``(site, layer)``. Uniform schedules keep
+the old flat spellings working: ``paper_policy().tp.backend`` still
+reads through (attribute access on a Schedule delegates to its
+representative config), and ``with_backend`` / ``with_scheme`` map over
+whole tables.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import json
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.comm_config import CommConfig, NO_COMPRESSION, \
     default_comm_config
 
+# All addressable sites; LAYER_SITES are the ones that bind per layer
+# (activation traffic inside blocks). grad / qag / qgrad_rs are per-step
+# sites — they resolve at layer=None.
+SITES = ("tp", "a2a", "grad", "qag", "qgrad_rs", "tp_bwd")
+LAYER_SITES = ("tp", "a2a", "tp_bwd")
+
+SCHEDULE_KINDS = ("uniform", "first_last", "per_layer", "depth_interp")
+
+
+# ===========================================================================
+# schedules: declarative (layer -> CommConfig) maps
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Declarative ``layer_index -> Optional[CommConfig]`` map.
+
+    kinds:
+      uniform       every layer gets ``base`` (None = site disabled)
+      first_last    layers ``< k`` and ``>= n_layers - k`` get ``edge``,
+                    the middle gets ``base`` (the classic
+                    first/last-K-layers-high-precision allocation)
+      per_layer     explicit list; indices past the end clamp to the
+                    last entry (so a 4-entry list works for any depth)
+      depth_interp  bit width linearly interpolated from ``start_bits``
+                    (layer 0) to ``end_bits`` (layer n-1); group/spike
+                    follow the paper defaults for the resolved width,
+                    everything else (scheme, backend, scale_int, ...)
+                    comes from ``base``
+
+    Resolving with ``layer=None`` returns the *representative* config
+    (``base`` / first list entry) — what non-layer sites and summary
+    printers see. Attribute access delegates to the representative, so
+    uniform schedules keep quacking like the flat ``CommConfig`` they
+    replaced (``policy.tp.backend`` etc.).
+    """
+    kind: str = "uniform"
+    base: Optional[CommConfig] = None
+    edge: Optional[CommConfig] = None
+    k: int = 1
+    configs: Tuple[Optional[CommConfig], ...] = ()
+    start_bits: int = 8
+    end_bits: int = 8
+
+    def __post_init__(self):
+        assert self.kind in SCHEDULE_KINDS, f"unknown schedule {self.kind}"
+        if self.kind == "per_layer":
+            assert self.configs, "per_layer schedule needs >= 1 config"
+        if self.kind == "first_last":
+            assert self.k >= 1 and self.edge is not None
+
+    # ---- resolution -----------------------------------------------------
+
+    def resolve(self, layer: Optional[int] = None,
+                n_layers: Optional[int] = None) -> Optional[CommConfig]:
+        """The config bound at ``layer`` (of ``n_layers`` total)."""
+        if layer is None:
+            if self.kind == "per_layer":
+                return self.configs[0]
+            return self.base
+        if self.kind == "uniform":
+            return self.base
+        if self.kind == "per_layer":
+            return self.configs[min(layer, len(self.configs) - 1)]
+        assert n_layers is not None and n_layers >= 1, \
+            f"{self.kind} schedule needs n_layers (CommPolicy.bind)"
+        if self.kind == "first_last":
+            if layer < self.k or layer >= n_layers - self.k:
+                return self.edge
+            return self.base
+        # depth_interp
+        if self.base is None:
+            return None
+        if n_layers == 1:
+            bits = self.start_bits
+        else:
+            frac = layer / (n_layers - 1)
+            bits = round(self.start_bits
+                         + (self.end_bits - self.start_bits) * frac)
+        return self.base.with_bits(int(bits))
+
+    def layer_configs(self, n_layers: int) -> List[Optional[CommConfig]]:
+        return [self.resolve(i, n_layers) for i in range(n_layers)]
+
+    # ---- mapping (the with_backend / with_scheme substrate) -------------
+
+    def map(self, fn: Callable[[CommConfig], CommConfig]) -> "Schedule":
+        """``fn`` applied to every embedded config. Pointwise, so it
+        commutes with resolution: ``sched.map(f).resolve(l) ==
+        f(sched.resolve(l))`` for any layer (the property test wall)."""
+        m = lambda c: None if c is None else fn(c)
+        return dataclasses.replace(
+            self, base=m(self.base), edge=m(self.edge),
+            configs=tuple(m(c) for c in self.configs))
+
+    # ---- flat-spelling compatibility ------------------------------------
+
+    def __getattr__(self, name: str):
+        # Only reached when normal lookup fails, i.e. for CommConfig
+        # attributes (.bits/.scheme/.backend/...): delegate to the
+        # representative config so uniform schedules keep the old flat
+        # CommPolicy field spellings working.
+        if name.startswith("_"):
+            raise AttributeError(name)
+        cfg = Schedule.resolve(self)
+        if cfg is None:
+            raise AttributeError(
+                f"disabled schedule has no attribute {name!r}")
+        return getattr(cfg, name)
+
+
+def uniform(cfg: Optional[CommConfig]) -> Schedule:
+    return Schedule(kind="uniform", base=cfg)
+
+
+def first_last_k(edge: CommConfig, mid: Optional[CommConfig],
+                 k: int = 1) -> Schedule:
+    """First/last ``k`` layers at ``edge`` precision, middle at ``mid``."""
+    return Schedule(kind="first_last", base=mid, edge=edge, k=k)
+
+
+def per_layer(configs: Sequence[Optional[CommConfig]]) -> Schedule:
+    return Schedule(kind="per_layer", configs=tuple(configs))
+
+
+def depth_interp(base: CommConfig, start_bits: int,
+                 end_bits: int) -> Schedule:
+    """Bit width linearly interpolated over depth, defaults-adjusted."""
+    return Schedule(kind="depth_interp", base=base,
+                    start_bits=start_bits, end_bits=end_bits)
+
+
+ScheduleLike = Union[Schedule, CommConfig, None]
+
+
+def as_schedule(v: ScheduleLike) -> Schedule:
+    """Coerce the old flat spellings (CommConfig / None) to a Schedule."""
+    if isinstance(v, Schedule):
+        return v
+    return uniform(v)
+
+
+# ===========================================================================
+# the policy engine
+# ===========================================================================
 
 @dataclasses.dataclass(frozen=True)
 class CommPolicy:
-    tp: CommConfig = NO_COMPRESSION
-    a2a: CommConfig = NO_COMPRESSION
-    grad: CommConfig = NO_COMPRESSION
-    qag: Optional[CommConfig] = None      # None -> plain all_gather
+    """PolicyTable: resolves ``(site, layer_index) -> CommConfig``.
+
+    Site fields accept a ``Schedule``, a flat ``CommConfig`` (promoted
+    to a uniform schedule — the old spelling), or ``None`` (site
+    disabled). Consumers go through :meth:`resolve`; model code binds
+    the depth first (:meth:`bind`) so first_last / depth_interp
+    schedules know ``n_layers``.
+    """
+    tp: Schedule = uniform(NO_COMPRESSION)
+    a2a: Schedule = uniform(NO_COMPRESSION)
+    grad: Schedule = uniform(NO_COMPRESSION)
+    qag: Schedule = uniform(None)          # None -> plain all_gather
     # ZeRO++-style quantized gradient reduce-scatter (the FSDP gather's
     # transpose). None -> exact psum_scatter.
-    qgrad_rs: Optional[CommConfig] = None
+    qgrad_rs: Schedule = uniform(None)
     # Backward-pass TP cotangent compression (beyond paper: the paper's
     # inference path has no backward; ZeRO++ quantizes gradients in the
     # same spirit). None -> exact psum of cotangents.
-    tp_bwd: Optional[CommConfig] = None
+    tp_bwd: Schedule = uniform(None)
     # EP token slicing (beyond-paper, §Perf): tokens are replicated over
     # the model axis, so each ep-group rank routes only its 1/ep slice
     # and the outputs are all-gathered — removes ep-fold duplicated
     # expert compute and dispatch volume. Off = paper-faithful baseline.
     ep_slice: bool = False
+    # Error-feedback gradient compression (SDP4Bit / EF21-style): the
+    # cross-pod grad AllReduce adds last step's local quantization error
+    # back in before compressing, and the new error is carried in the
+    # optimizer state. Lets the grad site run at 2-4 bits and still
+    # converge (see collectives.compressed_psum_ef).
+    grad_ef: bool = False
+    # Total block count, bound by model code (bind(cfg.n_layers)) so
+    # depth-addressed schedules resolve without threading n_layers
+    # through every call site.
+    n_layers: Optional[int] = None
+
+    def __post_init__(self):
+        for site in SITES:
+            v = getattr(self, site)
+            if not isinstance(v, Schedule):
+                object.__setattr__(self, site, as_schedule(v))
+
+    # ---- the resolver ---------------------------------------------------
+
+    def resolve(self, site: str, layer: Optional[int] = None,
+                n_layers: Optional[int] = None) -> Optional[CommConfig]:
+        """The ``CommConfig`` bound at ``(site, layer)``; None = exact.
+
+        ``layer=None`` (non-layer sites, or sites addressed outside any
+        block — e.g. the embedding psum) resolves the representative
+        config. ``n_layers`` falls back to the bound depth.
+        """
+        assert site in SITES, f"unknown site {site!r}"
+        sched: Schedule = getattr(self, site)
+        return sched.resolve(layer, n_layers if n_layers is not None
+                             else self.n_layers)
+
+    def bind(self, n_layers: int) -> "CommPolicy":
+        """Policy with the model depth attached (idempotent)."""
+        if self.n_layers == n_layers:
+            return self
+        return dataclasses.replace(self, n_layers=n_layers)
+
+    def map_sites(self, fn: Callable[[CommConfig], CommConfig],
+                  sites: Sequence[str] = SITES) -> "CommPolicy":
+        """``fn`` mapped over every config of the chosen site tables."""
+        return dataclasses.replace(
+            self, **{s: getattr(self, s).map(fn) for s in sites})
 
 
 BF16_POLICY = CommPolicy()
@@ -46,19 +263,13 @@ def with_backend(policy: CommPolicy, backend: str) -> CommPolicy:
 
     ``backend`` is ``"ref" | "pallas" | "auto"`` (see
     :data:`repro.core.comm_config.BACKENDS`); disabled sites are left
-    untouched. This is how launch/serving paths flip the whole policy
-    onto the fused Pallas wire codec at once.
+    untouched. Schedule-aware: maps over whole tables, so per-layer
+    policies flip every layer's config at once. This is how launch /
+    serving paths move the whole policy onto the fused Pallas wire
+    codec.
     """
-    def _site(cfg: Optional[CommConfig]) -> Optional[CommConfig]:
-        if cfg is None or not cfg.enabled:
-            return cfg
-        return cfg.with_backend(backend)
-
-    return dataclasses.replace(
-        policy,
-        tp=_site(policy.tp), a2a=_site(policy.a2a), grad=_site(policy.grad),
-        qag=_site(policy.qag), qgrad_rs=_site(policy.qgrad_rs),
-        tp_bwd=_site(policy.tp_bwd))
+    return policy.map_sites(
+        lambda c: c.with_backend(backend) if c.enabled else c)
 
 
 def with_scheme(policy: CommPolicy, scheme: str) -> CommPolicy:
@@ -73,16 +284,14 @@ def with_scheme(policy: CommPolicy, scheme: str) -> CommPolicy:
     there). Disabled sites are left untouched. This is the launch CLIs'
     ``--comm-scheme`` switch.
     """
-    def _site(cfg: Optional[CommConfig]) -> Optional[CommConfig]:
-        if cfg is None or not cfg.enabled:
-            return cfg
-        return cfg.with_scheme(scheme)
+    return policy.map_sites(
+        lambda c: c.with_scheme(scheme) if c.enabled else c,
+        sites=("tp", "grad", "tp_bwd", "a2a"))
 
-    return dataclasses.replace(
-        policy,
-        tp=_site(policy.tp), grad=_site(policy.grad),
-        tp_bwd=_site(policy.tp_bwd), a2a=_site(policy.a2a))
 
+# ===========================================================================
+# stock policies (uniform schedules — the paper's flat configurations)
+# ===========================================================================
 
 # The paper's shipping configuration: INT8 g128 TP AllReduce, INT4 g32
 # MoE dispatch, hierarchical INT8 gradient sync across the slow bridge.
@@ -125,3 +334,165 @@ def aggressive_policy(backend: str = "auto") -> CommPolicy:
         tp_bwd=default_comm_config(8, backend=backend),
         ep_slice=True,
     )
+
+
+# Depth-scheduled variant of the paper policy: the sensitivity-critical
+# edge layers keep INT8 TP while the middle drops to INT4 (Dong et al.'s
+# per-layer allocation shape), with 2-bit EF gradient sync.
+def depth_policy(edge_bits: int = 8, mid_bits: int = 4, k: int = 1,
+                 grad_bits: int = 2, backend: str = "auto") -> CommPolicy:
+    return CommPolicy(
+        tp=first_last_k(default_comm_config(edge_bits, backend=backend),
+                        default_comm_config(mid_bits, backend=backend),
+                        k=k),
+        a2a=default_comm_config(4, backend=backend),
+        grad=default_comm_config(grad_bits, backend=backend),
+        grad_ef=True,
+    )
+
+
+# ===========================================================================
+# JSON (policies as config artifacts; see configs/policies/)
+# ===========================================================================
+
+def _cfg_to_dict(cfg: Optional[CommConfig]) -> Optional[Dict]:
+    if cfg is None:
+        return None
+    out = {}
+    for f in dataclasses.fields(CommConfig):
+        v = getattr(cfg, f.name)
+        if v != f.default:
+            out[f.name] = v
+    return out
+
+
+def _cfg_from_dict(d: Optional[Dict]) -> Optional[CommConfig]:
+    if d is None:
+        return None
+    known = {f.name for f in dataclasses.fields(CommConfig)}
+    bad = set(d) - known
+    assert not bad, f"unknown CommConfig fields {sorted(bad)}"
+    return CommConfig(**d)
+
+
+def _schedule_to_dict(s: Schedule) -> Optional[Dict]:
+    if s.kind == "uniform":
+        if s.base is None:
+            return None
+        return {"schedule": "uniform", "config": _cfg_to_dict(s.base)}
+    if s.kind == "first_last":
+        return {"schedule": "first_last", "k": s.k,
+                "edge": _cfg_to_dict(s.edge), "mid": _cfg_to_dict(s.base)}
+    if s.kind == "per_layer":
+        return {"schedule": "per_layer",
+                "configs": [_cfg_to_dict(c) for c in s.configs]}
+    return {"schedule": "depth_interp", "base": _cfg_to_dict(s.base),
+            "start_bits": s.start_bits, "end_bits": s.end_bits}
+
+
+def _schedule_from_dict(d: Optional[Dict]) -> Schedule:
+    if d is None:
+        return uniform(None)
+    kind = d.get("schedule", "uniform")
+    if kind == "uniform":
+        return uniform(_cfg_from_dict(d.get("config")))
+    if kind == "first_last":
+        return first_last_k(_cfg_from_dict(d["edge"]),
+                            _cfg_from_dict(d.get("mid")),
+                            k=int(d.get("k", 1)))
+    if kind == "per_layer":
+        return per_layer([_cfg_from_dict(c) for c in d["configs"]])
+    if kind == "depth_interp":
+        return depth_interp(_cfg_from_dict(d["base"]),
+                            int(d["start_bits"]), int(d["end_bits"]))
+    raise ValueError(f"unknown schedule kind {kind!r}")
+
+
+def policy_to_json(policy: CommPolicy, indent: int = 2) -> str:
+    doc = {"sites": {s: _schedule_to_dict(getattr(policy, s))
+                     for s in SITES},
+           "ep_slice": policy.ep_slice,
+           "grad_ef": policy.grad_ef}
+    return json.dumps(doc, indent=indent) + "\n"
+
+
+def policy_from_json(text: str) -> CommPolicy:
+    doc = json.loads(text)
+    sites = doc.get("sites", {})
+    bad = set(sites) - set(SITES)
+    assert not bad, f"unknown policy sites {sorted(bad)}"
+    kw = {s: _schedule_from_dict(sites.get(s))
+          for s in SITES if s in sites}
+    # tp/a2a/grad default to enabled-off NO_COMPRESSION, matching the
+    # dataclass defaults, when the file omits them entirely.
+    return CommPolicy(ep_slice=bool(doc.get("ep_slice", False)),
+                      grad_ef=bool(doc.get("grad_ef", False)), **kw)
+
+
+def load_policy_file(path: str) -> CommPolicy:
+    with open(path) as f:
+        return policy_from_json(f.read())
+
+
+def save_policy_file(path: str, policy: CommPolicy) -> None:
+    with open(path, "w") as f:
+        f.write(policy_to_json(policy))
+
+
+# ===========================================================================
+# describe_policy: the startup banner (per-site / per-layer wire plan)
+# ===========================================================================
+
+def _cfg_cols(cfg: Optional[CommConfig], n: int) -> Tuple[str, ...]:
+    if cfg is None or not cfg.enabled:
+        return ("-", "-", "-", "exact", "-", f"{2 * n}", "1.00x")
+    return (str(cfg.bits), str(cfg.group), "SR" if cfg.spike else "-",
+            cfg.scheme, cfg.backend, str(cfg.wire_bytes(n)),
+            f"{cfg.compression_ratio(n):.2f}x")
+
+
+def _ranges(eq: List[bool]) -> List[Tuple[int, int]]:
+    """Contiguous runs of equal entries -> [(start, end_inclusive)]."""
+    runs, start = [], 0
+    for i in range(1, len(eq)):
+        if not eq[i]:
+            runs.append((start, i - 1))
+            start = i
+    runs.append((start, len(eq) - 1))
+    return runs
+
+
+def describe_policy(policy: CommPolicy, n_layers: Optional[int] = None,
+                    n: int = 4096) -> str:
+    """Human-readable per-site / per-layer wire plan.
+
+    One row per (site, contiguous equal-config layer range): bits,
+    group, spike, scheme, backend, and the exact wire bytes +
+    compression ratio for ``n`` numbers (from ``CommConfig.wire_layout``
+    — the same accounting the Table 4/5 benches use). Non-layer sites
+    (grad/qag/qgrad_rs) print a single ``*`` row.
+    """
+    nl = n_layers if n_layers is not None else policy.n_layers
+    head = ("site", "layers", "bits", "group", "spike", "scheme",
+            "backend", f"wire B/{n}", "ratio")
+    rows = [head]
+    for site in SITES:
+        if site in LAYER_SITES and nl:
+            cfgs = [policy.resolve(site, i, nl) for i in range(nl)]
+            eq = [True] + [cfgs[i] == cfgs[i - 1] for i in range(1, nl)]
+            for s, e in _ranges(eq):
+                span = str(s) if s == e else f"{s}-{e}"
+                rows.append((site, span) + _cfg_cols(cfgs[s], n))
+        else:
+            rows.append((site, "*") + _cfg_cols(policy.resolve(site), n))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(head))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+             for r in rows]
+    flags = []
+    if policy.ep_slice:
+        flags.append("ep_slice")
+    if policy.grad_ef:
+        flags.append("grad_ef (error-feedback gradient compression)")
+    if flags:
+        lines.append("flags: " + ", ".join(flags))
+    return "\n".join(lines)

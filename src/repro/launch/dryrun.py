@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs import (ARCH_IDS, all_pairs, get_config, lowering_plan)
 from repro.core.policy import BF16_POLICY, CommPolicy, aggressive_policy, \
-    optimized_policy, paper_policy
+    describe_policy, optimized_policy, paper_policy
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import INPUT_SHAPES, ModelConfig
 from repro.models.model import param_groups
@@ -93,6 +93,15 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         kind = m.group(1).lower()
         out[kind] = out.get(kind, 0) + _tensor_bytes(line[eq + 1:m.start()])
     return out
+
+
+def _cost_dict(compiled) -> Dict:
+    """compiled.cost_analysis() normalized across jax versions: 0.4.x
+    returns a one-dict-per-device list, newer versions a flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
 
 
 def input_specs(cfg: ModelConfig, shape_name: str, mesh,
@@ -220,6 +229,10 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     plan = make_plan(cfg, tp=16, fsdp=lp.fsdp)
     pol = policy if policy is not None else _policy(policy_name)
+    if verbose:
+        print(f"[dryrun] policy plan ({policy_name}, {cfg.n_layers} "
+              f"layers):")
+        print(describe_policy(pol, cfg.n_layers))
     shp = INPUT_SHAPES[shape_name]
     store = abstract_store(cfg, plan)
     batch = input_specs(cfg, shape_name, mesh, lp.cache_len)
@@ -251,7 +264,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         n_dev *= v
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     try:
         hlo = compiled.as_text()
     except Exception:
@@ -323,7 +336,7 @@ def _measure(cfg, shape_name, lp, pol, mesh, micro) -> Dict:
                                   window_override=lp.window_override)
             lowered = fn.lower(store, cshapes, batch)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     try:
         hlo = compiled.as_text()
     except Exception:

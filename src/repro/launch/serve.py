@@ -16,6 +16,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.comm_config import SCHEMES
 from repro.core.policy import (BF16_POLICY, aggressive_policy,
+                               describe_policy, load_policy_file,
                                paper_policy, with_backend, with_scheme)
 from repro.launch.mesh import make_test_mesh
 from repro.models.model import param_groups
@@ -38,6 +39,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mesh", default="1,1")
     ap.add_argument("--policy", default="paper", choices=list(POLICIES))
+    ap.add_argument("--policy-file", default=None,
+                    help="JSON policy artifact (see configs/policies/); "
+                         "overrides --policy")
     ap.add_argument("--codec-backend", default="auto",
                     choices=("auto", "ref", "pallas"),
                     help="wire codec backend for every comm site")
@@ -52,9 +56,12 @@ def main(argv=None):
     data_n, model_n = (int(x) for x in args.mesh.split(","))
     mesh = make_test_mesh(data=data_n, model=model_n)
     plan = make_plan(cfg, tp=model_n, fsdp=data_n)
-    policy = with_backend(POLICIES[args.policy](), args.codec_backend)
+    base_pol = load_policy_file(args.policy_file) if args.policy_file \
+        else POLICIES[args.policy]()
+    policy = with_backend(base_pol, args.codec_backend)
     if args.comm_scheme:
         policy = with_scheme(policy, args.comm_scheme)
+    print(describe_policy(policy, cfg.n_layers))
     cache_len = args.prompt_len + args.gen
 
     store = build_store(param_groups(cfg, plan), plan,

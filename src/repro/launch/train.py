@@ -21,7 +21,9 @@ import jax.numpy as jnp
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.comm_config import SCHEMES
 from repro.core.policy import (BF16_POLICY, aggressive_policy,
-                               paper_policy, with_backend, with_scheme)
+                               depth_policy, describe_policy,
+                               load_policy_file, paper_policy,
+                               with_backend, with_scheme)
 from repro.launch.mesh import make_test_mesh
 from repro.models.model import param_groups
 from repro.parallel.plan import make_plan
@@ -29,10 +31,11 @@ from repro.parallel.shardings import build_store
 from repro.train import checkpoint as ckpt_lib
 from repro.train.data import DataConfig, make_dataset, to_device
 from repro.train.optim import OptimConfig
-from repro.train.train_step import init_train_state, make_train_step
+from repro.train.train_step import (init_train_state, make_train_step,
+                                    wants_grad_ef)
 
 POLICIES = {"paper": paper_policy, "bf16": lambda: BF16_POLICY,
-            "aggressive": aggressive_policy}
+            "aggressive": aggressive_policy, "depth": depth_policy}
 
 
 def main(argv=None):
@@ -45,8 +48,17 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--mesh", default="1,1",
-                    help="data,model sizes (devices must exist)")
+                    help="data,model[,pod] sizes (devices must exist; "
+                         "a pod axis turns on the cross-pod grad sync)")
     ap.add_argument("--policy", default="paper", choices=list(POLICIES))
+    ap.add_argument("--policy-file", default=None,
+                    help="JSON policy artifact (see configs/policies/); "
+                         "overrides --policy — the schedule grammar "
+                         "supports per-layer bit allocation")
+    ap.add_argument("--grad-ef", action="store_true",
+                    help="error-feedback gradient compression: carry the "
+                         "grad AR quantization error in the optimizer "
+                         "state and re-inject it next step")
     ap.add_argument("--codec-backend", default="auto",
                     choices=("auto", "ref", "pallas"),
                     help="wire codec backend for every comm site")
@@ -62,26 +74,45 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    data_n, model_n = (int(x) for x in args.mesh.split(","))
-    mesh = make_test_mesh(data=data_n, model=model_n)
+    mesh_dims = [int(x) for x in args.mesh.split(",")]
+    data_n, model_n = mesh_dims[0], mesh_dims[1]
+    pod_n = mesh_dims[2] if len(mesh_dims) > 2 else 0
+    mesh = make_test_mesh(data=data_n, model=model_n, pod=pod_n)
     plan = make_plan(cfg, tp=model_n, fsdp=data_n)
-    policy = with_backend(POLICIES[args.policy](), args.codec_backend)
+    base_pol = load_policy_file(args.policy_file) if args.policy_file \
+        else POLICIES[args.policy]()
+    policy = with_backend(base_pol, args.codec_backend)
     if args.comm_scheme:
         policy = with_scheme(policy, args.comm_scheme)
+    if args.grad_ef:
+        import dataclasses
+        policy = dataclasses.replace(policy, grad_ef=True)
     opt_cfg = OptimConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
                           total_steps=args.steps)
 
+    pol_name = args.policy_file or args.policy
     print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params "
           f"({cfg.active_param_count()/1e6:.1f}M active), mesh "
-          f"{dict(mesh.shape)}, policy={args.policy}")
+          f"{dict(mesh.shape)}, policy={pol_name}")
+    print(describe_policy(policy, cfg.n_layers))
 
+    grad_ef = wants_grad_ef(policy, mesh)
     if args.resume:
         store, opt, start = ckpt_lib.restore(args.resume, mesh)
+        if grad_ef and "ef" not in opt:
+            # older checkpoint without a residual: start EF from zero
+            opt["ef"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), store)
+        elif not grad_ef:
+            # EF checkpoint resumed with EF off: the step's opt_spec has
+            # no "ef" leaf, so a stale residual would be a pytree
+            # mismatch
+            opt.pop("ef", None)
         print(f"[train] resumed from {args.resume} @ step {start}")
     else:
         store = build_store(param_groups(cfg, plan), plan,
                             jax.random.PRNGKey(0), jnp.float32, mesh)
-        opt = init_train_state(store, opt_cfg)
+        opt = init_train_state(store, opt_cfg, grad_ef=grad_ef)
         start = 0
 
     step_fn = make_train_step(cfg, plan, policy, opt_cfg, mesh,

@@ -162,13 +162,14 @@ def _project_qkv(p, x, kv_src, cfg, plan, prefix=""):
     return q, k, v
 
 
-def _finish(p, ctx, valid, policy: CommPolicy, cfg, prefix=""):
+def _finish(p, ctx, valid, policy: CommPolicy, cfg, prefix="",
+            layer=None):
     """Mask padded heads, out-project, quantized TP AllReduce."""
     b, s = ctx.shape[0], ctx.shape[1]
     ctx = ctx * valid[None, None, :, None]
     y = jnp.einsum("...h,hd->...d", ctx.reshape(b, s, -1),
                    p[prefix + "wo"])
-    y = tp_psum(y, policy)
+    y = tp_psum(y, policy, layer=layer)
     if cfg.use_bias:
         y = y + p[prefix + "bo"]
     return y
@@ -178,7 +179,8 @@ def self_attention(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
                    cfg: ModelConfig, plan: ShardingPlan,
                    policy: CommPolicy, *, causal: bool = True,
                    window: Optional[int] = None,
-                   cache: Optional[Dict] = None, prefix: str = ""
+                   cache: Optional[Dict] = None, prefix: str = "",
+                   layer: Optional[int] = None
                    ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Full-sequence (cache=None) or single-token cached decode.
 
@@ -195,7 +197,7 @@ def self_attention(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
         ve = jnp.take(v, kvmap, axis=2)
         ctx = blockwise_attention(q, ke, ve, positions, positions,
                                   causal, window)
-        return _finish(p, ctx, valid, policy, cfg, prefix), None
+        return _finish(p, ctx, valid, policy, cfg, prefix, layer), None
 
     # ---- cached decode: x is (B, 1, d), positions is scalar ----
     pos = cache["pos"]
@@ -260,13 +262,13 @@ def self_attention(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
         ctx = (jnp.sum(a_all * corr[..., None], axis=0)
                / jnp.maximum(l_g, 1e-20)[..., None])
     ctx = ctx.astype(x.dtype)
-    return _finish(p, ctx, valid, policy, cfg, prefix), new_cache
+    return _finish(p, ctx, valid, policy, cfg, prefix, layer), new_cache
 
 
 def cross_attention(p: Dict, x: jnp.ndarray, enc: jnp.ndarray,
                     cfg: ModelConfig, plan: ShardingPlan,
-                    policy: CommPolicy, prefix: str = "x"
-                    ) -> jnp.ndarray:
+                    policy: CommPolicy, prefix: str = "x",
+                    layer: Optional[int] = None) -> jnp.ndarray:
     """Cross-attention onto encoder/image embeddings (B, Senc, d).
     No positional rotation on q/k (whisper/mllama style abs-pos is in the
     embeddings); never causal; no cache needed (enc is static)."""
@@ -279,4 +281,4 @@ def cross_attention(p: Dict, x: jnp.ndarray, enc: jnp.ndarray,
     ve = jnp.take(v, kvmap, axis=2)
     ctx = blockwise_attention(q, ke, ve, qpos, kpos, causal=False,
                               window=None)
-    return _finish(p, ctx, valid, policy, cfg, prefix)
+    return _finish(p, ctx, valid, policy, cfg, prefix, layer)

@@ -13,16 +13,24 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.collectives import compressed_psum
-from repro.core.comm_config import CommConfig
+from repro.core.comm_config import CommConfig, NO_COMPRESSION
 from repro.core.policy import CommPolicy
 
 TP_AXES = ("model",)
 
 
-def tp_psum(x: jnp.ndarray, policy: CommPolicy,
-            groups=None) -> jnp.ndarray:
-    """The paper's TP AllReduce site (fwd; bwd per policy.tp_bwd)."""
-    return compressed_psum(x, TP_AXES, policy.tp, groups, policy.tp_bwd)
+def tp_psum(x: jnp.ndarray, policy: CommPolicy, groups=None,
+            layer: Optional[int] = None) -> jnp.ndarray:
+    """The paper's TP AllReduce site (fwd; bwd per the tp_bwd site).
+
+    ``layer`` is the global block index (None for out-of-block traffic
+    like the embedding psum) — the policy engine resolves the
+    ``(site, layer)`` pair, so depth-scheduled policies bind different
+    widths to different layers here.
+    """
+    cfg = policy.resolve("tp", layer) or NO_COMPRESSION
+    bwd = policy.resolve("tp_bwd", layer)
+    return compressed_psum(x, TP_AXES, cfg, groups, bwd)
 
 
 # --------------------------------------------------------------------------
@@ -139,7 +147,8 @@ def vocab_parallel_ce(logits_loc: jnp.ndarray, labels: jnp.ndarray,
 # --------------------------------------------------------------------------
 
 def mlp_apply(p: Dict, x: jnp.ndarray, act: str, policy: CommPolicy,
-              use_bias: bool = False) -> jnp.ndarray:
+              use_bias: bool = False,
+              layer: Optional[int] = None) -> jnp.ndarray:
     if act in ("swiglu", "geglu"):
         h = jnp.einsum("...d,df->...f", x, p["w1"])
         g = jnp.einsum("...d,df->...f", x, p["w3"])
@@ -152,7 +161,7 @@ def mlp_apply(p: Dict, x: jnp.ndarray, act: str, policy: CommPolicy,
             h = h + p["b1"]
         h = gelu(h)
     y = jnp.einsum("...f,fd->...d", h, p["w2"])
-    y = tp_psum(y, policy)
+    y = tp_psum(y, policy, layer=layer)
     if use_bias:
         y = y + p["b2"]
     return y.astype(x.dtype)

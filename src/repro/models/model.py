@@ -134,8 +134,14 @@ def _norm(p, x, cfg, name):
 def apply_block(kind: str, p: Dict, x: jnp.ndarray, *,
                 positions, enc_out, cfg: ModelConfig, plan: ShardingPlan,
                 policy: CommPolicy, window_override: Optional[int],
-                cache: Optional[Dict]):
-    """-> (x, new_cache, aux_loss)"""
+                cache: Optional[Dict], layer: Optional[int] = None):
+    """-> (x, new_cache, aux_loss)
+
+    ``layer`` is the global block index (prefix + pattern*repeats +
+    suffix numbering); every comm site inside the block resolves its
+    config at ``(site, layer)``, which is what makes depth-scheduled
+    policies bind.
+    """
     aux = jnp.zeros((), jnp.float32)
     new_cache: Any = {}
 
@@ -145,43 +151,46 @@ def apply_block(kind: str, p: Dict, x: jnp.ndarray, *,
         window = cfg.window if kind == "local" else window_override
         a, kv = attn.self_attention(
             p, h, positions, cfg, plan, policy, causal=causal,
-            window=window, cache=cache.get("kv") if cache else None)
+            window=window, cache=cache.get("kv") if cache else None,
+            layer=layer)
         x = x + a
         if kv is not None:
             new_cache["kv"] = kv
         if kind == "dec":
             h = _norm(p, x, cfg, "n3_")
             x = x + attn.cross_attention(p, h, enc_out, cfg, plan, policy,
-                                         prefix="x")
+                                         prefix="x", layer=layer)
         h = _norm(p, x, cfg, "n2_")
         if kind == "moe":
-            f, aux = moe_mod.moe_apply(p, h, cfg, plan, policy)
+            f, aux = moe_mod.moe_apply(p, h, cfg, plan, policy,
+                                       layer=layer)
         else:
-            f = mlp_apply(p, h, cfg.act, policy, cfg.use_bias)
+            f = mlp_apply(p, h, cfg.act, policy, cfg.use_bias, layer=layer)
         x = x + f
 
     elif kind == "xattn":
         h = _norm(p, x, cfg, "n1_")
         x = x + attn.cross_attention(p, h, enc_out, cfg, plan, policy,
-                                     prefix="x")
+                                     prefix="x", layer=layer)
         h = _norm(p, x, cfg, "n2_")
-        x = x + mlp_apply(p, h, cfg.act, policy, cfg.use_bias)
+        x = x + mlp_apply(p, h, cfg.act, policy, cfg.use_bias, layer=layer)
 
     elif kind == "rec":
         h = _norm(p, x, cfg, "n1_")
         a, st = rec_mod.rglru_apply(p, h, cfg, plan, policy,
-                                    state=cache.get("rg") if cache else None)
+                                    state=cache.get("rg") if cache else None,
+                                    layer=layer)
         x = x + a
         if st is not None:
             new_cache["rg"] = st
         h = _norm(p, x, cfg, "n2_")
-        x = x + mlp_apply(p, h, cfg.act, policy, cfg.use_bias)
+        x = x + mlp_apply(p, h, cfg.act, policy, cfg.use_bias, layer=layer)
 
     elif kind in ("mlstm", "slstm"):
         h = _norm(p, x, cfg, "n1_")
         fn = rec_mod.mlstm_apply if kind == "mlstm" else rec_mod.slstm_apply
         a, st = fn(p, h, cfg, plan, policy,
-                   state=cache.get("st") if cache else None)
+                   state=cache.get("st") if cache else None, layer=layer)
         x = x + a
         if st is not None:
             new_cache["st"] = st
@@ -208,6 +217,36 @@ def init_block_cache(kind: str, cfg: ModelConfig, plan: ShardingPlan,
 # ===========================================================================
 # forward
 # ===========================================================================
+
+def policy_segments(cfg: ModelConfig, policy: CommPolicy):
+    """Split the pattern scan into maximal runs of repeats whose resolved
+    layer-site configs are identical -> ``[(start, end), ...)`` repeat
+    ranges (end exclusive).
+
+    The scanned pattern executes one traced body for all repeats, so a
+    config that varies across repeats can't bind inside a single scan
+    (bit widths are shape-determining). Depth-scheduled policies instead
+    scan each equal-config segment separately; uniform policies resolve
+    to ONE segment, keeping HLO size exactly what it was (O(pattern
+    period)). First/last-K schedules cost at most 2 extra segments.
+    """
+    from repro.core.policy import LAYER_SITES
+    r_total = cfg.pattern_repeats
+    base, period = len(cfg.prefix), len(cfg.pattern)
+
+    def sig(r):
+        return tuple(policy.resolve(site, base + r * period + j)
+                     for j in range(period) for site in LAYER_SITES)
+
+    segs, start, cur = [], 0, sig(0)
+    for r in range(1, r_total):
+        s = sig(r)
+        if s != cur:
+            segs.append((start, r))
+            start, cur = r, s
+    segs.append((start, r_total))
+    return segs
+
 
 def _encode(views, cfg, plan, policy, enc_embeds, qag, qgrad=None):
     """Whisper-style encoder over stub frame embeddings (B, n_ctx, d)."""
@@ -245,8 +284,9 @@ def forward(views: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
     be 1 (single-token decode step).
     """
     groups = param_groups(cfg, plan)
-    qag = policy.qag
-    qgrad = getattr(policy, "qgrad_rs", None)
+    policy = policy.bind(cfg.n_layers)   # depth-addressed schedules
+    qag = policy.resolve("qag")
+    qgrad = policy.resolve("qgrad_rs")
     decode = caches is not None
 
     emb_specs = groups["embed"][1]
@@ -280,19 +320,19 @@ def forward(views: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {}
 
-    def run_one(kind, gname, carry_x, cache):
+    def run_one(kind, gname, layer, carry_x, cache):
         specs = groups[gname][1]
         p = gather_group({k: v[0] for k, v in views[gname].items()},
                          specs, plan, dtype, qag, qgrad)
         return apply_block(kind, p, carry_x, positions=positions,
                            enc_out=enc_out, cfg=cfg, plan=plan,
                            policy=policy, window_override=window_override,
-                           cache=cache)
+                           cache=cache, layer=layer)
 
     for i, kind in enumerate(cfg.prefix):
         g = f"pre{i}_{kind}"
         x, nc, aux = jax.checkpoint(
-            functools.partial(run_one, kind, g))(
+            functools.partial(run_one, kind, g, i))(
                 x, caches.get(g) if decode else None)
         aux_total += aux
         if decode:
@@ -300,37 +340,55 @@ def forward(views: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
 
     if cfg.pattern_repeats:
         specs = groups["pattern"][1]
+        base, period = len(cfg.prefix), len(cfg.pattern)
 
-        def body(carry, xs):
-            cx, caux = carry
-            layer_views, layer_cache = xs
-            p = gather_group(layer_views, specs, plan, dtype, qag, qgrad)
-            ncs = {}
-            for j, kind in enumerate(cfg.pattern):
-                pj = {n[len(f"L{j}_"):]: v for n, v in p.items()
-                      if n.startswith(f"L{j}_")}
-                cj = layer_cache.get(f"L{j}") if decode else None
-                cx, nc, aux = apply_block(
-                    kind, pj, cx, positions=positions, enc_out=enc_out,
-                    cfg=cfg, plan=plan, policy=policy,
-                    window_override=window_override, cache=cj)
-                caux += aux
-                ncs[f"L{j}"] = nc
-            return (cx, caux), ncs
+        def make_body(layer0):
+            # layer0: first global block index of the segment; the
+            # resolved configs are constant across the segment's
+            # repeats, so resolving at layer0 + j binds the right
+            # config for every repeat the scan covers.
+            def body(carry, xs):
+                cx, caux = carry
+                layer_views, layer_cache = xs
+                p = gather_group(layer_views, specs, plan, dtype, qag,
+                                 qgrad)
+                ncs = {}
+                for j, kind in enumerate(cfg.pattern):
+                    pj = {n[len(f"L{j}_"):]: v for n, v in p.items()
+                          if n.startswith(f"L{j}_")}
+                    cj = layer_cache.get(f"L{j}") if decode else None
+                    cx, nc, aux = apply_block(
+                        kind, pj, cx, positions=positions, enc_out=enc_out,
+                        cfg=cfg, plan=plan, policy=policy,
+                        window_override=window_override, cache=cj,
+                        layer=layer0 + j)
+                    caux += aux
+                    ncs[f"L{j}"] = nc
+                return (cx, caux), ncs
+            return body
 
         xs = (views["pattern"],
               caches["pattern"] if decode else
               jnp.zeros((cfg.pattern_repeats,)))
-        (x, aux_total), pat_caches = lax.scan(
-            jax.checkpoint(body), (x, aux_total), xs,
-            unroll=cfg.pattern_repeats if UNROLL_LAYER_SCAN else 1)
+        seg_caches = []
+        for s, e in policy_segments(cfg, policy):
+            xs_seg = xs if (s, e) == (0, cfg.pattern_repeats) else \
+                jax.tree_util.tree_map(lambda a: a[s:e], xs)
+            (x, aux_total), pc = lax.scan(
+                jax.checkpoint(make_body(base + s * period)),
+                (x, aux_total), xs_seg,
+                unroll=(e - s) if UNROLL_LAYER_SCAN else 1)
+            seg_caches.append(pc)
         if decode:
-            new_caches["pattern"] = pat_caches
+            new_caches["pattern"] = seg_caches[0] if len(seg_caches) == 1 \
+                else jax.tree_util.tree_map(
+                    lambda *cs: jnp.concatenate(cs, axis=0), *seg_caches)
 
     for i, kind in enumerate(cfg.suffix):
         g = f"suf{i}_{kind}"
+        layer = len(cfg.prefix) + len(cfg.pattern) * cfg.pattern_repeats + i
         x, nc, aux = jax.checkpoint(
-            functools.partial(run_one, kind, g))(
+            functools.partial(run_one, kind, g, layer))(
                 x, caches.get(g) if decode else None)
         aux_total += aux
         if decode:

@@ -21,13 +21,14 @@ to the XLA path (tests/_multidev_script.py ``fused_a2a``).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core.collectives import compressed_psum, dispatch_all_to_all
+from repro.core.comm_config import NO_COMPRESSION
 from repro.core.policy import CommPolicy
 from repro.models.config import ModelConfig
 from repro.models.layers import gelu
@@ -61,8 +62,18 @@ def capacity(tokens: int, cfg: ModelConfig) -> int:
 
 def moe_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
               plan: ShardingPlan, policy: CommPolicy,
-              prefix: str = "moe_") -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x (B,S,d) replicated over the model axis -> (out, aux_loss)."""
+              prefix: str = "moe_",
+              layer: Optional[int] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,d) replicated over the model axis -> (out, aux_loss).
+
+    ``layer`` is the global block index; the dispatch payload width and
+    the within-expert psum both come from the policy engine's
+    ``(site, layer)`` resolution, so depth-scheduled policies can run
+    e.g. INT8 dispatch on the edge MoE layers and INT4 in the middle.
+    """
+    a2a_cfg = policy.resolve("a2a", layer) or NO_COMPRESSION
+    tp_cfg = policy.resolve("tp", layer) or NO_COMPRESSION
     m = cfg.moe
     mp = plan.moe
     b, s, d = x.shape
@@ -115,7 +126,7 @@ def moe_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
         src, mode="drop")
     buf = buf.reshape(mp.ep, mp.e_loc * cap, d)
     groups = mp.ep_groups if mp.ep < plan.tp or mp.etp > 1 else None
-    recv = dispatch_all_to_all(buf, "model", policy.a2a, groups)
+    recv = dispatch_all_to_all(buf, "model", a2a_cfg, groups)
 
     # ---- expert FFN (my e_loc experts, etp-sharded hidden) ----
     tok = recv.reshape(mp.ep, mp.e_loc, cap, d)
@@ -128,7 +139,7 @@ def moe_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
         h = gelu(h)
     y = jnp.einsum("etf,efd->etd", h, p[prefix + "w2"])
     if mp.etp > 1:
-        y = compressed_psum(y, ("model",), policy.tp, mp.etp_groups)
+        y = compressed_psum(y, ("model",), tp_cfg, mp.etp_groups)
 
     # ---- combine (BF16, unquantized — paper-faithful) ----
     y = y.reshape(mp.e_loc, mp.ep, cap, d).transpose(1, 0, 2, 3)

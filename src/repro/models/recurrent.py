@@ -62,7 +62,8 @@ def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
 
 def rglru_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
                 plan: ShardingPlan, policy: CommPolicy,
-                state: Optional[Dict] = None, prefix: str = "rg_"
+                state: Optional[Dict] = None, prefix: str = "rg_",
+                layer: Optional[int] = None
                 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """x (B,S,d) -> (B,S,d). state={'h','conv'} for decode (S=1)."""
     u = jnp.einsum("bsd,dw->bsw", x, p[prefix + "wx"])
@@ -94,7 +95,7 @@ def rglru_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
     g = gelu(jnp.einsum("bsd,dw->bsw", x, p[prefix + "wg"]))
     y = (h.astype(x.dtype) * g)
     y = jnp.einsum("bsw,wd->bsd", y, p[prefix + "wo"])
-    return tp_psum(y, policy).astype(x.dtype), new_state
+    return tp_psum(y, policy, layer=layer).astype(x.dtype), new_state
 
 
 def rglru_init_state(cfg: ModelConfig, plan: ShardingPlan, batch: int):
@@ -143,7 +144,8 @@ def _mlstm_step(carry, xs):
 
 def mlstm_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
                 plan: ShardingPlan, policy: CommPolicy,
-                state: Optional[Dict] = None, prefix: str = "ml_"
+                state: Optional[Dict] = None, prefix: str = "ml_",
+                layer: Optional[int] = None
                 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     b, s, d = x.shape
     nh = plan.nh_lstm_loc
@@ -182,7 +184,7 @@ def mlstm_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
     h = h.reshape(b, -1, nh, dh) * valid[None, None, :, None]
     y = h.reshape(b, -1, nh * dh).astype(x.dtype) * og
     y = jnp.einsum("bsi,id->bsd", y, p[prefix + "wo"])
-    return tp_psum(y, policy).astype(x.dtype), new_state
+    return tp_psum(y, policy, layer=layer).astype(x.dtype), new_state
 
 
 def mlstm_init_state(cfg: ModelConfig, plan: ShardingPlan, batch: int):
@@ -235,7 +237,8 @@ def _slstm_step(p, prefix, carry, xs):
 
 def slstm_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
                 plan: ShardingPlan, policy: CommPolicy,
-                state: Optional[Dict] = None, prefix: str = "sl_"
+                state: Optional[Dict] = None, prefix: str = "sl_",
+                layer: Optional[int] = None
                 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     b, s, d = x.shape
     nh = plan.nh_lstm_loc
@@ -269,7 +272,7 @@ def slstm_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
     h = h * valid[None, None, :, None]
     y = h.reshape(b, -1, nh * dh).astype(x.dtype)
     y = jnp.einsum("bsi,id->bsd", y, p[prefix + "wout"])
-    return tp_psum(y, policy).astype(x.dtype), new_state
+    return tp_psum(y, policy, layer=layer).astype(x.dtype), new_state
 
 
 def slstm_init_state(cfg: ModelConfig, plan: ShardingPlan, batch: int):

@@ -39,12 +39,20 @@ def lr_schedule(cfg: OptimConfig, step: jnp.ndarray) -> jnp.ndarray:
     return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
 
 
-def init_opt_state(params: Any, cfg: OptimConfig) -> Dict[str, Any]:
+def init_opt_state(params: Any, cfg: OptimConfig,
+                   grad_ef: bool = False) -> Dict[str, Any]:
     dt = jnp.dtype(cfg.moment_dtype)
     zeros = lambda p: jnp.zeros(p.shape, dt)
-    return {"m": jax.tree_util.tree_map(zeros, params),
-            "v": jax.tree_util.tree_map(zeros, params),
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"m": jax.tree_util.tree_map(zeros, params),
+             "v": jax.tree_util.tree_map(zeros, params),
+             "step": jnp.zeros((), jnp.int32)}
+    if grad_ef:
+        # error-feedback residual for the compressed grad AllReduce:
+        # lives with the optimizer state (same ZeRO sharding as the
+        # grads it corrects), donated and checkpointed alongside m/v
+        ef = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state["ef"] = jax.tree_util.tree_map(ef, params)
+    return state
 
 
 def global_grad_norm(grads: Any) -> jnp.ndarray:

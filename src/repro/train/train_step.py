@@ -15,7 +15,6 @@ Gradient communication map (all sites use the paper's machinery):
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -25,8 +24,8 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.collectives import compressed_psum
-from repro.core.comm_config import CommConfig
+from repro.core.collectives import compressed_psum, compressed_psum_ef
+from repro.core.comm_config import CommConfig, NO_COMPRESSION
 from repro.core.policy import CommPolicy
 from repro.models.config import ModelConfig
 from repro.models.model import forward, lm_loss, param_groups
@@ -93,14 +92,46 @@ def make_loss_fn(cfg: ModelConfig, plan: ShardingPlan, policy: CommPolicy,
     return loss_fn
 
 
+def pod_grad_config(policy: CommPolicy) -> CommConfig:
+    """The grad-site config for the cross-pod sync, resolver-routed.
+
+    The pod sync runs on already-reduce-scattered flat shards over the
+    SINGLE ``pod`` axis, while the hierarchical schemes address an
+    (inner, outer) axis *pair* — that two-axis/one-axis mismatch is why
+    a hardcoded ``scheme="two_step"`` override used to live here. The
+    single-axis dispatch in ``collectives._flat_all_reduce`` now handles
+    it: ``"hierarchical"`` degenerates to the two-step it is on one
+    axis, and ``"hier_pp"`` keeps its pipelined schedule by batching
+    microchunks through one two-step — so the resolved config passes
+    through unchanged and ``hier_pp`` grad policies stay pipelined
+    across the pod bridge.
+    """
+    return policy.resolve("grad") or NO_COMPRESSION
+
+
+def wants_grad_ef(policy: CommPolicy, mesh) -> bool:
+    """Whether this (policy, mesh) pair carries an EF residual: the
+    grad site must be enabled+compressed on a multi-pod mesh (the only
+    place the quantized grad AR runs) and the policy must ask for it."""
+    return bool(policy.grad_ef and "pod" in mesh.axis_names
+                and pod_grad_config(policy).enabled)
+
+
 def make_train_step_fn(cfg: ModelConfig, plan: ShardingPlan,
                        policy: CommPolicy, opt_cfg: OptimConfig,
-                       multi_pod: bool, n_micro: int = 1):
-    """The per-rank train step to run under shard_map."""
+                       multi_pod: bool, n_micro: int = 1,
+                       use_ef: Optional[bool] = None):
+    """The per-rank train step to run under shard_map.
+
+    ``use_ef`` must equal ``wants_grad_ef(policy, mesh)`` of the mesh
+    the step runs on (make_train_step passes it) so the returned opt
+    tree matches the shard_map specs; None derives it from multi_pod.
+    """
     rep_mask = None  # built lazily (needs specs only)
     loss_fn = make_loss_fn(cfg, plan, policy, multi_pod, n_micro)
-    pod_cfg = dataclasses.replace(policy.grad, scheme="two_step") \
-        if policy.grad.enabled else policy.grad
+    pod_cfg = pod_grad_config(policy)
+    if use_ef is None:
+        use_ef = bool(policy.grad_ef and multi_pod and pod_cfg.enabled)
 
     def step(store, opt_state, batch):
         (seed_loss, raw), grads = jax.value_and_grad(
@@ -113,10 +144,23 @@ def make_train_step_fn(cfg: ModelConfig, plan: ShardingPlan,
                  for g, gg in grads.items()}
 
         # --- cross-pod sync: the paper's quantized two-step AR on the
-        #     already-RS'd flat shards (hierarchical scheme, realized) ---
+        #     already-RS'd flat shards (hierarchical scheme, realized).
+        #     With grad_ef the residual pytree (optimizer state, ZeRO-
+        #     sharded like the grads) re-injects last step's local
+        #     quantization error before compressing (EF21-style). ---
+        new_ef = None
         if multi_pod:
-            grads = jax.tree_util.tree_map(
-                lambda gr: compressed_psum(gr, ("pod",), pod_cfg), grads)
+            if use_ef:
+                flat_g, tdef = jax.tree_util.tree_flatten(grads)
+                flat_e = tdef.flatten_up_to(opt_state["ef"])
+                outs = [compressed_psum_ef(gr, e, ("pod",), pod_cfg)
+                        for gr, e in zip(flat_g, flat_e)]
+                grads = tdef.unflatten([o[0] for o in outs])
+                new_ef = tdef.unflatten([o[1] for o in outs])
+            else:
+                grads = jax.tree_util.tree_map(
+                    lambda gr: compressed_psum(gr, ("pod",), pod_cfg),
+                    grads)
 
         sq = global_grad_norm(grads)
         sq = lax.psum(lax.psum(sq, "data"), "model")
@@ -126,6 +170,8 @@ def make_train_step_fn(cfg: ModelConfig, plan: ShardingPlan,
 
         new_store, new_opt, lr = adamw_update(store, grads, opt_state,
                                               opt_cfg, gnorm)
+        if new_ef is not None:
+            new_opt["ef"] = new_ef
         loss_rep = lax.pmean(raw, "data")
         if multi_pod:
             loss_rep = lax.pmean(loss_rep, "pod")
@@ -140,8 +186,9 @@ def make_train_step(cfg: ModelConfig, plan: ShardingPlan,
                     global_batch: int, n_micro: int = 1):
     """jit(shard_map(step)) over the production mesh."""
     multi_pod = "pod" in mesh.axis_names
+    use_ef = wants_grad_ef(policy, mesh)
     step = make_train_step_fn(cfg, plan, policy, opt_cfg, multi_pod,
-                              n_micro)
+                              n_micro, use_ef=use_ef)
     bspec = batch_spec(global_batch, mesh)
     store_spec = jax.tree_util.tree_map(lambda _: STORE_SPEC,
                                         param_groups(cfg, plan))
@@ -150,6 +197,8 @@ def make_train_step(cfg: ModelConfig, plan: ShardingPlan,
         bs["enc_embeds"] = bspec
     metric_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
     opt_spec = {"m": STORE_SPEC, "v": STORE_SPEC, "step": P()}
+    if use_ef:
+        opt_spec["ef"] = STORE_SPEC    # EF residual, sharded like grads
 
     sm = compat.shard_map(
         step, mesh=mesh,
@@ -159,5 +208,7 @@ def make_train_step(cfg: ModelConfig, plan: ShardingPlan,
     return jax.jit(sm, donate_argnums=(0, 1))
 
 
-def init_train_state(store, opt_cfg: OptimConfig):
-    return init_opt_state(store, opt_cfg)
+def init_train_state(store, opt_cfg: OptimConfig, grad_ef: bool = False):
+    """Optimizer state; ``grad_ef`` adds the zero EF residual pytree
+    (pass ``wants_grad_ef(policy, mesh)`` so state and step agree)."""
+    return init_opt_state(store, opt_cfg, grad_ef=grad_ef)

@@ -328,12 +328,132 @@ def check_ep_slice():
     print("ep_slice ok (bit-exact vs replicated dispatch)")
 
 
+def check_grad_ef_train():
+    """2-bit cross-pod gradient sync: with error feedback the toy run
+    (a) reaches a LOWER loss after 50 steps than the same policy
+    without EF (the SDP4Bit convergence claim, acceptance-tested), and
+    (b) tracks the exact-gradient parameter trajectory markedly better
+    — the structural EF guarantee (both quantization stages' errors
+    are re-injected, so the applied-gradient drift stays bounded).
+    """
+    from repro.configs import get_smoke_config
+    from repro.core.comm_config import CommConfig
+    from repro.core.policy import CommPolicy
+    from repro.models.model import param_groups
+    from repro.parallel.plan import make_plan
+    from repro.parallel.shardings import build_store
+    from repro.train.data import DataConfig, make_dataset, to_device
+    from repro.train.optim import OptimConfig
+    from repro.train.train_step import (init_train_state, make_train_step,
+                                        wants_grad_ef)
+
+    mesh = make_test_mesh(data=2, model=2, pod=2)
+    cfg = get_smoke_config("qwen3-14b")
+    plan = make_plan(cfg, tp=2, fsdp=2)
+    steps = 50
+    opt_cfg = OptimConfig(lr=3e-3, warmup_steps=2, total_steps=steps)
+    ds = make_dataset(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                 global_batch=8))
+    # The coarsest 2-bit wire (group 128, no spike reserving): without
+    # EF this measurably damages the run — the regime the SDP4Bit claim
+    # is about. (With spike reserving + g32 the 2-bit error is small
+    # enough that a 50-step toy comparison drowns in trajectory noise;
+    # measured EF margins at THIS setting are +0.11..0.31 nats.)
+    grad2 = CommConfig(bits=2, group=128, spike=False)
+    pols = {
+        "exact": CommPolicy(grad=CommConfig(enabled=False, scheme="nccl")),
+        "plain": CommPolicy(grad=grad2, grad_ef=False),
+        "ef": CommPolicy(grad=grad2, grad_ef=True),
+    }
+    finals, tails, stores = {}, {}, {}
+    for name, pol in pols.items():
+        store = build_store(param_groups(cfg, plan), plan,
+                            jax.random.PRNGKey(0), jnp.float32, mesh)
+        step = make_train_step(cfg, plan, pol, opt_cfg, mesh,
+                               global_batch=8)
+        opt = init_train_state(store, opt_cfg,
+                               grad_ef=wants_grad_ef(pol, mesh))
+        losses = []
+        for i in range(steps):
+            batch = to_device(ds.batch(i))
+            store, opt, m = step(store, opt, batch)
+            losses.append(float(m["loss"]))
+            assert np.isfinite(losses[-1]), (name, i, losses[-1])
+        finals[name] = losses[-1]
+        tails[name] = float(np.mean(losses[-10:]))
+        stores[name] = store
+
+    def dist(name):
+        t = 0.0
+        for a, b in zip(jax.tree_util.tree_leaves(stores[name]),
+                        jax.tree_util.tree_leaves(stores["exact"])):
+            d = a.astype(jnp.float32) - b.astype(jnp.float32)
+            t += float(jnp.sum(d * d))
+        return t ** 0.5
+
+    d_plain, d_ef = dist("plain"), dist("ef")
+    # (a) the acceptance loss claim: lower loss after 50 steps (the
+    # tail-10 means are reported for context but not asserted — on a
+    # 50-step toy they sit inside trajectory noise)
+    assert finals["ef"] < finals["plain"], (finals, tails)
+    # (b) trajectory tracking: EF must stay closer to the exact-gradient
+    # run — measured ratio 0.755-0.760 at this setting, stable across
+    # runs, while a broken EF path sits at ~1.0; 0.95 separates them
+    # cleanly.
+    assert d_ef < 0.95 * d_plain, (d_ef, d_plain)
+    print("grad_ef_train ok", finals, tails,
+          {"dist_plain": round(d_plain, 4), "dist_ef": round(d_ef, 4)})
+
+
+def check_depth_policy_train():
+    """A depth-scheduled policy (edge layers INT8 TP, middle INT4, per
+    the segmented pattern scan) trains end-to-end on the 8-device mesh
+    and stays close to the BF16 loss — the policy-engine layer binding
+    exercised through the real train step."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.core.policy import BF16_POLICY, depth_policy
+    from repro.models.model import param_groups, policy_segments
+    from repro.parallel.plan import make_plan
+    from repro.parallel.shardings import build_store
+    from repro.train.data import DataConfig, make_dataset, to_device
+    from repro.train.optim import OptimConfig
+    from repro.train.train_step import (init_train_state, make_train_step,
+                                        wants_grad_ef)
+
+    mesh = make_test_mesh(data=2, model=2, pod=2)
+    cfg = get_smoke_config("qwen3-14b")
+    cfg = dataclasses.replace(cfg, pattern_repeats=4)
+    plan = make_plan(cfg, tp=2, fsdp=2)
+    pol = depth_policy(k=1)                  # layers 0 / N-1 INT8, mid INT4
+    assert len(policy_segments(cfg, pol.bind(cfg.n_layers))) == 3
+    opt_cfg = OptimConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    ds = make_dataset(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                 global_batch=8))
+    batch = to_device(ds.batch(0))
+    losses = {}
+    for name, p in (("bf16", BF16_POLICY), ("depth", pol)):
+        store = build_store(param_groups(cfg, plan), plan,
+                            jax.random.PRNGKey(0), jnp.float32, mesh)
+        step = make_train_step(cfg, plan, p, opt_cfg, mesh, global_batch=8)
+        opt = init_train_state(store, opt_cfg,
+                               grad_ef=wants_grad_ef(p, mesh))
+        _, _, m = step(store, opt, batch)
+        losses[name] = float(m["loss"])
+        assert np.isfinite(losses[name])
+    diff = abs(losses["bf16"] - losses["depth"])
+    assert diff < 0.1 * abs(losses["bf16"]) + 0.1, losses
+    print("depth_policy_train ok", losses)
+
+
 CHECKS = {
     "quantized_ar": check_quantized_ar,
     "fused_ar": check_fused_ar,
     "fused_a2a": check_fused_a2a,
     "a2a": check_a2a_semantics,
     "train_two_policies": check_train_two_policies,
+    "grad_ef_train": check_grad_ef_train,
+    "depth_policy_train": check_depth_policy_train,
     "tp_equivalence": check_tp_equivalence,
     "ep_slice": check_ep_slice,
 }

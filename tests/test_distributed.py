@@ -52,3 +52,34 @@ def test_tp_fsdp_equivalence_vs_single_device():
 
 def test_ep_token_slicing_exact():
     _run("ep_slice")
+
+
+def test_depth_scheduled_policy_trains():
+    _run("depth_policy_train")
+
+
+@pytest.mark.slow
+def test_grad_ef_2bit_beats_plain_after_50_steps():
+    _run("grad_ef_train")
+
+
+def test_depth_policy_file_cli():
+    """Acceptance: a depth-scheduled policy JSON runs end-to-end through
+    launch/train.py --policy-file on the 8-fake-device mesh (pod axis
+    included, so the 2-bit EF grad sync in the shipped artifact binds).
+    """
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    pol = os.path.join(root, "configs", "policies", "depth_scheduled.json")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-14b",
+         "--smoke", "--steps", "2", "--seq", "32", "--batch", "8",
+         "--mesh", "2,2,2", "--policy-file", pol, "--log-every", "1"],
+        capture_output=True, text=True, env=env, timeout=900, cwd=root)
+    assert r.returncode == 0, \
+        f"stdout:{r.stdout[-2000:]}\nstderr:{r.stderr[-3000:]}"
+    assert "first_last" not in r.stderr
+    assert "grad_ef" in r.stdout        # describe_policy banner printed
+    assert "last_loss" in r.stdout
