@@ -1,0 +1,17 @@
+"""Static comm-safety analysis (commcheck).
+
+Three layers over one substrate:
+
+* :mod:`repro.analysis.choreography` — N-rank happens-before analysis
+  of the declared RDMA protocols (:mod:`repro.kernels.protocol`);
+* :mod:`repro.analysis.layout` / :mod:`repro.analysis.vmem` — wire
+  buffer partition proofs and kernel VMEM budgeting;
+* :mod:`repro.analysis.sites` — the comm-site lint against the policy
+  engine, static enumeration + train-step trace.
+
+:mod:`repro.analysis.commcheck` is the CLI and the launch-time entry
+points (``launch_report`` / ``check_fused_request``);
+:mod:`repro.analysis.mutations` holds the self-test fixtures.
+"""
+from repro.analysis.report import (CheckReport, CommCheckError,  # noqa: F401
+                                   Diagnostic, RULES)

@@ -1,0 +1,399 @@
+"""commcheck: the static comm-safety analyzer CLI.
+
+Usage (PYTHONPATH=src):
+
+  python -m repro.analysis.commcheck                 # core static pass
+  python -m repro.analysis.commcheck --all           # + every shipped
+                                                     #   config x policy
+                                                     #   x mesh pair
+  python -m repro.analysis.commcheck --selftest      # mutation fixtures
+  python -m repro.analysis.commcheck --trace         # + train-step
+                                                     #   trace lane
+  python -m repro.analysis.commcheck --rules         # print rule table
+  python -m repro.analysis.commcheck --arch qwen3-14b --policy depth \\
+      --mesh 2,4                                     # one launch pair
+
+The core static pass is shape-independent: RDMA choreography for every
+model-axis size the launch meshes produce, the wire-layout partition
+sweep, and the codec block-chooser contract. ``--all`` adds the
+comm-site lint for every architecture x stock policy x JSON policy
+artifact, plus launch feasibility (exact payload VMEM / fused-mesh
+checks) for every ``configs.all_pairs()`` lowering on the production
+meshes. Launchers call :func:`launch_report` /
+:func:`check_fused_request` with their exact shapes before compiling.
+
+Exit status is 0 iff no rule fired at error severity.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import choreography, layout, sites, vmem
+from repro.analysis.report import (RULES, CheckReport, CommCheckError,
+                                   err)
+from repro.core.comm_config import CommConfig
+from repro.core.policy import CommPolicy
+
+#: model-axis sizes the launch meshes produce (--mesh data,model[,pod]
+#: on train/serve accepts any size — these cover the shipped defaults,
+#: the production tp=16, and odd/non-power-of-two shapes).
+TP_VALUES = (2, 3, 4, 8, 16)
+
+#: mesh shapes the launch CLIs accept, axis-name -> size.
+MESH_SHAPES: Tuple[Dict[str, int], ...] = (
+    {"data": 1, "model": 1},                      # CPU smoke default
+    {"data": 2, "model": 4},                      # 8-device test mesh
+    {"data": 16, "model": 16},                    # production single pod
+    {"pod": 2, "data": 16, "model": 16},          # production multi pod
+)
+
+
+def _policy_dir() -> Path:
+    return Path(__file__).resolve().parents[3] / "configs" / "policies"
+
+
+def shipped_policies() -> Dict[str, CommPolicy]:
+    """Stock policies + every JSON artifact under configs/policies/."""
+    from repro.core.policy import (BF16_POLICY, aggressive_policy,
+                                   depth_policy, load_policy_file,
+                                   optimized_policy, paper_policy)
+    pols: Dict[str, CommPolicy] = {
+        "paper": paper_policy(), "bf16": BF16_POLICY,
+        "optimized": optimized_policy(),
+        "aggressive": aggressive_policy(), "depth": depth_policy(),
+    }
+    pdir = _policy_dir()
+    if pdir.is_dir():
+        for f in sorted(pdir.glob("*.json")):
+            pols[f.name] = load_policy_file(str(f))
+    return pols
+
+
+# ---------------------------------------------------------------------------
+# launch-time feasibility (exact shapes; called by the launch CLIs too)
+# ---------------------------------------------------------------------------
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _padded_payload(cc: CommConfig, n: int, axis_size: int) -> int:
+    """The flat length ``compressed_psum`` actually communicates: padded
+    to a (axis, group, pipeline-chunk) multiple."""
+    chunks = cc.pipeline_chunks if cc.scheme == "hier_pp" else 1
+    mult = max(1, axis_size) * cc.group * max(1, chunks)
+    return _ceil_to(max(n, 1), mult)
+
+
+def _site_payloads(cfg, plan, policy: CommPolicy,
+                   mesh_shape: Dict[str, int], *, global_batch: int,
+                   seq: int, n_micro: int, mode: str
+                   ) -> List[Tuple[str, Optional[int], CommConfig, int, int]]:
+    """(site, layer, config, flat_payload, axis_size) for every enabled
+    site the launch would drive, with the exact padded byte accounting
+    ``compressed_psum`` / the dispatch A2A use."""
+    tp = mesh_shape.get("model", 1)
+    pod = mesh_shape.get("pod", 1)
+    dp = mesh_shape.get("data", 1) * pod
+    b_loc = max(1, -(-global_batch // dp))
+    mb = max(1, -(-b_loc // n_micro)) if mode == "train" else b_loc
+    s = 1 if mode == "decode" else seq
+    out = []
+    seen = set()
+    # a size-1 axis performs no communication: the psum/dispatch is an
+    # identity and the wire codec never runs — nothing to budget.
+    if tp > 1:
+        for layer in range(cfg.n_layers):
+            cc = policy.resolve("tp", layer)
+            if cc is not None and cc.enabled and ("tp", cc) not in seen:
+                seen.add(("tp", cc))
+                n = _padded_payload(cc, mb * s * cfg.d_model, tp)
+                out.append(("tp", layer, cc, n, tp))
+    if cfg.moe is not None and plan.moe is not None and plan.moe.ep > 1:
+        for layer, kind in enumerate(cfg.layer_kinds):
+            if kind != "moe":
+                continue
+            cc = policy.resolve("a2a", layer)
+            if cc is None or not cc.enabled or ("a2a", cc) in seen:
+                continue
+            seen.add(("a2a", cc))
+            from repro.models.moe import capacity
+            t = mb * s
+            if policy.ep_slice and plan.moe.ep > 1:
+                t = -(-t // plan.moe.ep)
+            cap = capacity(t, cfg)
+            e_loc = cfg.moe.n_experts // plan.moe.ep
+            d_pad = _ceil_to(cfg.d_model, cc.group)
+            # encode as (site, layer, cfg, rows*d flat, axis): rows is
+            # the per-peer block count e_loc*cap over the ep-sized hop
+            out.append(("a2a", layer, cc, e_loc * cap * d_pad,
+                        plan.moe.ep))
+    if mode == "train" and pod > 1:
+        cc = policy.resolve("grad")
+        if cc is not None and cc.enabled:
+            fsdp = mesh_shape.get("data", 1)
+            n_shard = -(-cfg.param_count() // max(1, fsdp))
+            out.append(("grad", None, cc,
+                        _padded_payload(cc, n_shard, pod), pod))
+    return out
+
+
+def launch_report(cfg, plan, policy: CommPolicy,
+                  mesh_shape: Dict[str, int], *, global_batch: int,
+                  seq: int, n_micro: int = 1, mode: str = "train",
+                  tpu: bool = False, subject: str = "") -> CheckReport:
+    """The full pre-launch pass for one exact (config, policy, mesh,
+    shapes) tuple: site lint, choreography for this mesh's axis sizes,
+    and exact-payload VMEM / layout checks for the kernel-backed paths.
+
+    ``tpu`` says whether the launch would engage the *compiled* TPU
+    kernels. The VMEM budget only exists there — off TPU the fused
+    schemes fall back to XLA emulation and the pallas codec runs in
+    interpret mode (or the ref path), where tile size is unconstrained —
+    so the VMEM checks are gated on it. The launch guards autodetect it
+    from ``jax.default_backend()``; the CLI exposes ``--tpu`` to run the
+    sweep as-if-on-hardware.
+    """
+    rep = CheckReport()
+    policy = policy.bind(cfg.n_layers)
+    rep.extend(sites.check_policy_sites(cfg, policy, subject))
+    tp = mesh_shape.get("model", 1)
+    if tp >= 2:
+        diags, n = choreography.check_choreography([tp])
+        rep.extend(diags, n)
+    payloads = _site_payloads(cfg, plan, policy, mesh_shape,
+                              global_batch=global_batch, seq=seq,
+                              n_micro=n_micro, mode=mode)
+    for site, lyr, cc, n, axis in payloads:
+        sub = (f"{subject} " if subject else "") + \
+            f"site={site} layer={lyr} payload={n} axis={axis}"
+        # wire layout at the REAL payload width (incl. lane warning)
+        if site == "a2a":
+            width = _ceil_to(cfg.d_model, cc.group)
+        else:
+            width = _ceil_to(-(-n // max(axis, 1)), cc.group)
+        rep.extend(layout.check_config_layouts(cc, (width,), sub,
+                                               lanes=True), 1)
+        if not tpu:
+            continue            # no compiled kernels -> no VMEM budget
+        if cc.scheme == "fused" and axis > 1:
+            if site == "a2a":
+                rows = n // _ceil_to(cfg.d_model, cc.group)
+                kernels = vmem.a2a_vmem_bytes(
+                    cc, tp=axis, m=rows,
+                    d=_ceil_to(cfg.d_model, cc.group))
+            else:
+                kernels = vmem.allreduce_vmem_bytes(cc, n, axis)
+            over = vmem.check_kernel_vmem(kernels, sub)
+            rep.extend(over, 1)
+            if over:
+                rep.extend([err(
+                    "SITE-FUSED-MESH",
+                    f"fused scheme at site {site!r} cannot run on this "
+                    f"mesh/payload (axis={axis}, flat payload {n}): the "
+                    f"RDMA kernels stage whole operands in VMEM — use "
+                    f"--comm-scheme two_step (same schedule over XLA "
+                    f"collectives) or shrink the per-device payload",
+                    sub)])
+        elif cc.backend in ("pallas", "auto"):
+            # XLA schemes with the pallas codec: tile-chooser contract
+            rows = max(axis, 1) if site != "a2a" else n // width
+            rep.extend(vmem.check_codec_block(cc, rows, width, sub), 1)
+    return rep
+
+
+def check_fused_request(cfg, plan, policy: CommPolicy,
+                        mesh_shape: Dict[str, int], *, global_batch: int,
+                        seq: int, n_micro: int = 1, mode: str = "train",
+                        tpu: Optional[bool] = None,
+                        context: str = "") -> None:
+    """Fail-fast guard for fused-scheme launches (always on).
+
+    Raises :class:`CommCheckError` with the offending diagnostics when
+    any site resolves to the fused scheme on a mesh/payload the RDMA
+    kernels cannot serve — instead of a deep ``pallas_call`` error (or
+    a silent VMEM OOM) minutes into compilation. ``tpu`` defaults to
+    the live ``jax.default_backend()``: off TPU the fused schemes fall
+    back to XLA emulation, so only the scheme-compatibility matrix can
+    reject the launch there.
+    """
+    policy = policy.bind(cfg.n_layers)
+    uses_fused = any(
+        cc is not None and cc.enabled and cc.scheme == "fused"
+        for site, layer in sites.enumerate_sites(cfg)
+        for cc in [policy.resolve(site, layer)])
+    if not uses_fused:
+        return
+    if tpu is None:
+        import jax
+        tpu = jax.default_backend() == "tpu"
+    rep = launch_report(cfg, plan, policy, mesh_shape,
+                        global_batch=global_batch, seq=seq,
+                        n_micro=n_micro, mode=mode, tpu=tpu,
+                        subject=context)
+    if not rep.ok:
+        raise CommCheckError(rep, context or "fused-scheme launch")
+
+
+# ---------------------------------------------------------------------------
+# the sweeps
+# ---------------------------------------------------------------------------
+
+def core_report() -> CheckReport:
+    """The shape-independent static pass (choreography/layout/blocks)."""
+    rep = CheckReport()
+    diags, n = choreography.check_choreography(TP_VALUES)
+    rep.extend(diags, n)
+    diags, n = layout.check_layouts()
+    rep.extend(diags, n)
+    diags, n = vmem.check_vmem_static()
+    rep.extend(diags, n)
+    return rep
+
+
+def all_report(trace: bool = False, tpu: bool = False) -> CheckReport:
+    """--all: core pass + site lint for every shipped architecture x
+    policy, + launch feasibility for every registry lowering pair on
+    the production meshes."""
+    from repro.configs import all_pairs, get_config, lowering_plan
+    from repro.models.config import INPUT_SHAPES
+    from repro.parallel.plan import make_plan
+    rep = core_report()
+    pols = shipped_policies()
+    for arch, shape_name in all_pairs():
+        cfg = get_config(arch)
+        lp = lowering_plan(arch, shape_name)
+        if lp.skip:
+            continue
+        shp = INPUT_SHAPES[shape_name]
+        for mesh_shape in MESH_SHAPES:
+            if "pod" in mesh_shape and lp.mode != "train":
+                continue                # pod meshes only train
+            try:
+                plan = make_plan(cfg, tp=mesh_shape["model"],
+                                 fsdp=mesh_shape.get("data", 1))
+            except AssertionError:
+                # the launcher itself rejects this (arch, mesh) combo
+                # (head/dim divisibility) — not a shipped pair
+                continue
+            for pname, pol in pols.items():
+                sub = f"{arch}/{shape_name}/{pname}/" \
+                      f"{'x'.join(str(v) for v in mesh_shape.values())}"
+                rep.extend(launch_report(
+                    cfg, plan, pol, mesh_shape,
+                    global_batch=shp.global_batch, seq=shp.seq_len,
+                    n_micro=lp.n_micro or 1, mode=lp.mode, tpu=tpu,
+                    subject=sub).diags, 1)
+    if trace:
+        from repro.configs import ARCH_IDS
+        for arch in ARCH_IDS:
+            rep.extend(sites.trace_train_sites(
+                arch, pols["paper"], f"trace {arch}/paper"), 1)
+    return rep
+
+
+def pair_report(arch: str, policy: CommPolicy, policy_name: str,
+                mesh_shape: Dict[str, int], *, global_batch: int = 8,
+                seq: int = 128, n_micro: int = 1, tpu: bool = False,
+                trace: bool = False) -> CheckReport:
+    """One (arch, policy, mesh) launch pair — the CLI single-pair mode."""
+    from repro.configs import get_config
+    from repro.parallel.plan import make_plan
+    cfg = get_config(arch)
+    plan = make_plan(cfg, tp=mesh_shape.get("model", 1),
+                     fsdp=mesh_shape.get("data", 1))
+    rep = core_report()
+    rep.extend(launch_report(cfg, plan, policy, mesh_shape,
+                             global_batch=global_batch, seq=seq,
+                             n_micro=n_micro, mode="train", tpu=tpu,
+                             subject=f"{arch}/{policy_name}").diags, 1)
+    if trace:
+        rep.extend(sites.trace_train_sites(
+            arch, policy, f"trace {arch}/{policy_name}"), 1)
+    return rep
+
+
+def selftest_report() -> CheckReport:
+    """Mutation fixtures: every rule must fire on its broken input."""
+    from repro.analysis.mutations import run_selftest
+    rep = CheckReport()
+    passed, failed = run_selftest()
+    rep.checked = len(passed) + len(failed)
+    for f in failed:
+        rep.diags.append(err("SITE-TRACE",
+                             f"mutation fixture did not fire: {f}",
+                             "selftest"))
+    return rep
+
+
+def _parse_mesh(spec: str) -> Dict[str, int]:
+    dims = [int(x) for x in spec.split(",")]
+    shape = {"data": dims[0], "model": dims[1]}
+    if len(dims) > 2 and dims[2]:
+        shape = {"pod": dims[2], **shape}
+    return shape
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="commcheck",
+        description="static comm-safety analyzer (RDMA choreography, "
+                    "wire layouts, policy-resolved comm sites)")
+    ap.add_argument("--all", action="store_true",
+                    help="every shipped config x policy x mesh pair")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the mutation fixtures")
+    ap.add_argument("--trace", action="store_true",
+                    help="also lower train steps under a recording "
+                         "policy (slower; needs jax)")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("--tpu", action="store_true",
+                    help="budget VMEM as if the compiled TPU kernels "
+                         "ran (off by default: off-TPU launches use "
+                         "XLA emulation / interpret mode)")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--policy", default="paper")
+    ap.add_argument("--policy-file", default=None)
+    ap.add_argument("--mesh", default="2,4",
+                    help="data,model[,pod] for --arch mode")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        w = max(len(r) for r in RULES)
+        for rule, desc in RULES.items():
+            print(f"{rule.ljust(w)}  {desc}")
+        return 0
+
+    if args.selftest:
+        rep = selftest_report()
+        print(rep.format("commcheck --selftest"))
+        return 0 if rep.ok else 1
+
+    if args.arch:
+        from repro.core.policy import load_policy_file
+        pols = shipped_policies()
+        if args.policy_file:
+            pol, pname = load_policy_file(args.policy_file), \
+                args.policy_file
+        else:
+            pol, pname = pols[args.policy], args.policy
+        rep = pair_report(args.arch, pol, pname,
+                          _parse_mesh(args.mesh), tpu=args.tpu,
+                          trace=args.trace)
+        print(rep.format(f"commcheck {args.arch} x {pname} "
+                         f"x {args.mesh}", max_warnings=20))
+        return 0 if rep.ok else 1
+
+    rep = (all_report(trace=args.trace, tpu=args.tpu)
+           if args.all else core_report())
+    print(rep.format("commcheck --all" if args.all else "commcheck",
+                     max_warnings=20))
+    return 0 if rep.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,245 @@
+"""Mutation fixtures: deliberately broken inputs, one per rule.
+
+A static analyzer that never fires is indistinguishable from one that
+works — so every rule ships with a fixture that *must* trigger exactly
+it. ``commcheck --selftest`` (and tests/test_commcheck.py) runs each
+fixture and fails if its rule stays silent, proving the analyzer can
+still catch the bug class it was built for.
+
+Each fixture returns the diagnostics its broken input produces;
+:func:`run_selftest` checks the expected rule is among them.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from repro.analysis import choreography, layout, sites, vmem
+from repro.analysis.report import Diagnostic
+from repro.core.comm_config import CommConfig, Section, WireLayout
+from repro.kernels.protocol import (BARRIER, PUSH, READ, WAIT, WRITE,
+                                    BufferSpec, RingBarrier,
+                                    allreduce_scatter_protocol,
+                                    ring_pushes)
+
+_TP = 4
+
+
+def _proto(**over):
+    """The known-good scatter protocol with targeted field overrides."""
+    return allreduce_scatter_protocol(_TP)._replace(**over)
+
+
+# ---------------------------------------------------------------------------
+# choreography mutants
+# ---------------------------------------------------------------------------
+
+def deadlock_wait_before_push() -> List[Diagnostic]:
+    """WAIT ordered before PUSH: every rank blocks on a DMA that no one
+    has started."""
+    p = _proto(program=((WRITE, "send"), (BARRIER,), (WAIT,), (PUSH,),
+                        (READ, "recv"), (READ, "send")))
+    return choreography.check_protocol(p, _TP)
+
+
+def deadlock_barrier_overwait() -> List[Diagnostic]:
+    """Barrier waits for tp signals but only tp-1 arrive: permanent
+    stall (fires CHOREO-SEM statically and CHOREO-DEADLOCK in the
+    simulation)."""
+    p = _proto(barrier=RingBarrier(tuple(range(1, _TP)), _TP))
+    return choreography.check_protocol(p, _TP)
+
+
+def slot_mismatch_shared_recv() -> List[Diagnostic]:
+    """All descriptors share receive slot 0: a wait can certify another
+    peer's transfer (counting semaphores still add up, so this is a
+    *static* uniqueness rule, not a deadlock)."""
+    pushes = tuple(s._replace(recv_slot=0)
+                   for s in ring_pushes(_TP, "dst", "my"))
+    p = _proto(pushes=pushes)
+    return choreography.check_protocol(p, _TP)
+
+
+def sem_self_signal() -> List[Diagnostic]:
+    """Barrier offset 0 mod tp: a rank signals itself and nobody else
+    completes its count."""
+    p = _proto(barrier=RingBarrier((0,) + tuple(range(1, _TP - 1)),
+                                   _TP - 1))
+    return choreography.check_protocol(p, _TP)
+
+
+def race_no_barrier() -> List[Diagnostic]:
+    """Pushes start before the liveness barrier: a fast rank's RDMA can
+    land in a peer's buffer before the peer allocated it."""
+    p = _proto(program=((WRITE, "send"), (PUSH,), (BARRIER,), (WAIT,),
+                        (READ, "recv"), (READ, "send")))
+    return choreography.check_protocol(p, _TP)
+
+
+def race_read_before_wait() -> List[Diagnostic]:
+    """Landing buffer decoded before the DMA waits complete."""
+    p = _proto(program=((WRITE, "send"), (BARRIER,), (PUSH,),
+                        (READ, "recv"), (WAIT,), (READ, "send")))
+    return choreography.check_protocol(p, _TP)
+
+
+def bounds_bad_row() -> List[Diagnostic]:
+    """A push addresses staging row tp (buffers have rows 0..tp-1)."""
+    pushes = ring_pushes(_TP, "dst", "my")
+    pushes = pushes[:-1] + (pushes[-1]._replace(src_row=_TP),)
+    p = _proto(pushes=pushes)
+    return choreography.check_protocol(p, _TP)
+
+
+def bounds_bad_slot() -> List[Diagnostic]:
+    """A descriptor uses semaphore slot sem_slots (one past the end)."""
+    pushes = ring_pushes(_TP, "dst", "my")
+    pushes = pushes[:-1] + (pushes[-1]._replace(send_slot=_TP - 1),)
+    p = _proto(pushes=pushes)
+    return choreography.check_protocol(p, _TP)
+
+
+def id_collision() -> List[Diagnostic]:
+    """Two kernels live in one program share a barrier collective_id."""
+    a = allreduce_scatter_protocol(_TP)
+    b = a._replace(name="other_kernel")
+    return choreography.check_collective_ids([a, b])
+
+
+def push_into_readonly() -> List[Diagnostic]:
+    """Push destination not declared remote-writable."""
+    p = _proto(buffers=(BufferSpec("send", _TP, False),
+                        BufferSpec("recv", _TP, False)))
+    return choreography.check_protocol(p, _TP)
+
+
+# ---------------------------------------------------------------------------
+# layout mutants (hand-built broken tables)
+# ---------------------------------------------------------------------------
+
+def _layout(planes, scale, zero, total, spike_vals=None, spike_idx=None):
+    return WireLayout(n=128, planes=planes, scale=scale, zero=zero,
+                      spike_vals=spike_vals, spike_idx=spike_idx,
+                      total=total)
+
+
+def layout_overlap() -> List[Diagnostic]:
+    """Scale section starts inside the bit plane."""
+    return layout.check_layout(
+        _layout(planes=((8, Section(0, 128)),), scale=Section(120, 2),
+                zero=Section(128, 2), total=130), "mutant")
+
+
+def layout_gap() -> List[Diagnostic]:
+    """Unaddressed bytes between plane and scale."""
+    return layout.check_layout(
+        _layout(planes=((8, Section(0, 128)),), scale=Section(136, 2),
+                zero=Section(138, 2), total=140), "mutant")
+
+
+def layout_bounds() -> List[Diagnostic]:
+    """Zero section runs past the declared total."""
+    return layout.check_layout(
+        _layout(planes=((8, Section(0, 128)),), scale=Section(128, 2),
+                zero=Section(130, 8), total=132), "mutant")
+
+
+def layout_undercover() -> List[Diagnostic]:
+    """Total larger than the byte span the sections cover."""
+    return layout.check_layout(
+        _layout(planes=((8, Section(0, 128)),), scale=Section(128, 2),
+                zero=Section(130, 2), total=256), "mutant")
+
+
+# ---------------------------------------------------------------------------
+# VMEM mutants
+# ---------------------------------------------------------------------------
+
+def vmem_overflow() -> List[Diagnostic]:
+    """A 64 Mi-element fused-AR payload cannot stage in 16 MB VMEM."""
+    cfg = CommConfig(bits=8, group=128)
+    return vmem.check_kernel_vmem(
+        vmem.allreduce_vmem_bytes(cfg, 1 << 26, 16), "mutant")
+
+
+def vmem_a2a_overflow() -> List[Diagnostic]:
+    """An oversized MoE dispatch blows the A2A staging budget."""
+    cfg = CommConfig(bits=4, group=32)
+    return vmem.check_kernel_vmem(
+        vmem.a2a_vmem_bytes(cfg, tp=16, m=4096, d=8192), "mutant")
+
+
+# ---------------------------------------------------------------------------
+# site mutants (broken policies against a real model config)
+# ---------------------------------------------------------------------------
+
+def _model_cfg():
+    from repro.configs import get_config
+    return get_config("moonshot-v1-16b-a3b")      # has moe blocks
+
+
+def unresolvable_site() -> List[Diagnostic]:
+    """depth_interp ending at 9 bits: mid-stack layers resolve to an
+    unsupported width."""
+    from repro.core.policy import CommPolicy, depth_interp
+    pol = CommPolicy(tp=depth_interp(CommConfig(bits=8), 8, 9))
+    return sites.check_policy_sites(_model_cfg(), pol, "mutant")
+
+
+def bad_a2a_scheme() -> List[Diagnostic]:
+    """Hierarchical schedule at the single-hop MoE dispatch."""
+    from repro.core.policy import CommPolicy
+    pol = CommPolicy(a2a=CommConfig(bits=4, group=32,
+                                    scheme="hierarchical"))
+    return sites.check_policy_sites(_model_cfg(), pol, "mutant")
+
+
+def ef_without_grad() -> List[Diagnostic]:
+    """grad_ef with the grad site exact: dead EF residual."""
+    from repro.core.policy import CommPolicy
+    pol = CommPolicy(grad=None, grad_ef=True)
+    return sites.check_policy_sites(_model_cfg(), pol, "mutant")
+
+
+# ---------------------------------------------------------------------------
+# the registry + runner
+# ---------------------------------------------------------------------------
+
+#: fixture name -> (builder, rule that MUST fire)
+FIXTURES: Dict[str, Tuple[Callable[[], List[Diagnostic]], str]] = {
+    "deadlock_wait_before_push": (deadlock_wait_before_push,
+                                  "CHOREO-DEADLOCK"),
+    "deadlock_barrier_overwait": (deadlock_barrier_overwait,
+                                  "CHOREO-DEADLOCK"),
+    "slot_mismatch_shared_recv": (slot_mismatch_shared_recv,
+                                  "CHOREO-SLOT"),
+    "sem_self_signal": (sem_self_signal, "CHOREO-SEM"),
+    "race_no_barrier": (race_no_barrier, "CHOREO-RACE"),
+    "race_read_before_wait": (race_read_before_wait, "CHOREO-RACE"),
+    "bounds_bad_row": (bounds_bad_row, "CHOREO-BOUNDS"),
+    "bounds_bad_slot": (bounds_bad_slot, "CHOREO-BOUNDS"),
+    "id_collision": (id_collision, "CHOREO-ID"),
+    "push_into_readonly": (push_into_readonly, "CHOREO-RACE"),
+    "layout_overlap": (layout_overlap, "LAYOUT-OVERLAP"),
+    "layout_gap": (layout_gap, "LAYOUT-GAP"),
+    "layout_bounds": (layout_bounds, "LAYOUT-BOUNDS"),
+    "layout_undercover": (layout_undercover, "LAYOUT-GAP"),
+    "vmem_overflow": (vmem_overflow, "VMEM-OVERFLOW"),
+    "vmem_a2a_overflow": (vmem_a2a_overflow, "VMEM-OVERFLOW"),
+    "unresolvable_site": (unresolvable_site, "SITE-RESOLVE"),
+    "bad_a2a_scheme": (bad_a2a_scheme, "SITE-SCHEME"),
+    "ef_without_grad": (ef_without_grad, "SITE-EF"),
+}
+
+
+def run_selftest() -> Tuple[List[str], List[str]]:
+    """Run every fixture; returns (passed, failed) fixture names, where
+    failure means the expected rule did NOT fire."""
+    passed, failed = [], []
+    for name, (fn, rule) in FIXTURES.items():
+        diags = fn()
+        if any(d.rule == rule for d in diags):
+            passed.append(name)
+        else:
+            fired = sorted({d.rule for d in diags})
+            failed.append(f"{name} (wanted {rule}, fired {fired})")
+    return passed, failed

@@ -1,0 +1,265 @@
+"""Comm-site lint: every site the model addresses, policy-resolved.
+
+The model code never touches a ``CommConfig`` directly — every
+communication site routes through ``CommPolicy.resolve(site, layer)``
+(the PR-5 engine). This checker proves the contract per
+(model config, policy) pair, twice over:
+
+**statically** (:func:`check_policy_sites`): enumerate the (site, layer)
+pairs the architecture addresses — the per-block ``tp`` / ``tp_bwd``
+psums (every layer kind funnels through ``layers.tp_psum``), the MoE
+dispatch ``a2a`` at each moe block, the layer-``None`` embedding psum
+and the per-step ``grad`` / ``qag`` / ``qgrad_rs`` sites — and verify:
+
+* **SITE-RESOLVE**: resolution succeeds at every addressed pair (a
+  depth-interpolated schedule can hit an unsupported bit width mid
+  stack) and the resolved config survives a codec round-trip whose wire
+  buffer matches its own ``wire_layout`` accounting;
+* **SITE-SCHEME**: the resolved scheme is implementable at that site's
+  collective shape (the A2A dispatch is a single hop — hierarchical
+  schemes have no (inner, outer) split there; the gather/scatter sites
+  have no fused kernel);
+* **SITE-EF**: ``grad_ef`` only with an enabled grad site (otherwise
+  the EF residual is dead state);
+* **SITE-SEGMENT**: ``model.policy_segments`` must partition the
+  repeats, and a depth-uniform policy must yield exactly ONE scan
+  segment (the HLO-size invariant the segmented scan was built around).
+
+**dynamically** (:func:`trace_train_sites`): lower one real train step
+(smoke-size config, test mesh, no execution) under a recording policy
+that logs every ``resolve`` call, and verify the trace hits the sites
+the static enumeration promises — tp / tp_bwd / qag / qgrad_rs / grad
+always, a2a iff the stack has moe blocks — with every logged layer
+index in range (SITE-TRACE). A comm call that bypasses the engine never
+logs, so new model code cannot silently grow unmanaged traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.analysis.report import Diagnostic, err
+from repro.core.comm_config import SCHEMES, CommConfig
+from repro.core.policy import LAYER_SITES, SITES, CommPolicy
+
+SiteAddr = Tuple[str, Optional[int]]
+
+#: which collective schedules are implementable per site. tp/grad/tp_bwd
+#: are psum-shaped (every scheme has a lowering, incl. the single-axis
+#: degeneracies in collectives._flat_all_reduce); the MoE dispatch is a
+#: single hop (no (inner, outer) split to be hierarchical over); the
+#: ZeRO gather/scatter sites are codec-wrapped XLA collectives with no
+#: fused kernel or hierarchy.
+ALLOWED_SCHEMES = {
+    "tp": set(SCHEMES),
+    "grad": set(SCHEMES),
+    "tp_bwd": set(SCHEMES),
+    "a2a": {"nccl", "two_step", "fused"},
+    "qag": {"nccl", "two_step"},
+    "qgrad_rs": {"nccl", "two_step"},
+}
+
+
+def enumerate_sites(cfg) -> List[SiteAddr]:
+    """Every (site, layer) pair the architecture addresses.
+
+    ``cfg`` is a ``ModelConfig``; layer sites come from its
+    ``layer_kinds``, the per-step sites resolve at ``layer=None`` (as
+    does the embedding psum, which runs outside any block).
+    """
+    sites: List[SiteAddr] = [("tp", None)]          # embedding psum
+    for i, kind in enumerate(cfg.layer_kinds):
+        sites.append(("tp", i))
+        sites.append(("tp_bwd", i))
+        if kind == "moe":
+            sites.append(("a2a", i))
+    sites += [("grad", None), ("qag", None), ("qgrad_rs", None)]
+    return sites
+
+
+#: configs already round-tripped this process (an --all sweep resolves
+#: the same handful of configs hundreds of times).
+_ROUNDTRIP_OK: Set[CommConfig] = set()
+
+
+def _roundtrip(cc: CommConfig, subject: str) -> List[Diagnostic]:
+    """Codec encode/decode agreement for one resolved config."""
+    from repro.core import codec
+    if cc in _ROUNDTRIP_OK:
+        return []
+    n = 2 * cc.group
+    rng = np.random.RandomState(0)
+    x = np.asarray(rng.standard_normal((2, n)), np.float32)
+    try:
+        ref = cc.with_backend("ref")     # static check: no pallas paths
+        wire = np.asarray(codec.encode(x, ref))
+        if wire.shape != (2, cc.wire_bytes(n)):
+            return [err("SITE-RESOLVE",
+                        f"encode produced {wire.shape}, wire_layout "
+                        f"promises (2, {cc.wire_bytes(n)})", subject)]
+        out = np.asarray(codec.decode(wire, ref, n, out_dtype=np.float32))
+    except Exception as e:                    # noqa: BLE001 — lint surface
+        return [err("SITE-RESOLVE",
+                    f"codec round-trip raised {type(e).__name__}: {e}",
+                    subject)]
+    if out.shape != x.shape or not np.all(np.isfinite(out)):
+        return [err("SITE-RESOLVE",
+                    "codec round-trip lost shape or produced non-finite "
+                    "values", subject)]
+    _ROUNDTRIP_OK.add(cc)
+    return []
+
+
+def check_policy_sites(cfg, policy: CommPolicy,
+                       subject: str = "") -> List[Diagnostic]:
+    """The static lint for one (model config, policy) pair."""
+    from repro.models.model import policy_segments
+    out: List[Diagnostic] = []
+    policy = policy.bind(cfg.n_layers)
+    prefix = (subject + " ") if subject else ""
+    seen: Set[CommConfig] = set()
+    for site, layer in enumerate_sites(cfg):
+        sub = f"{prefix}site={site} layer={layer}"
+        try:
+            cc = policy.resolve(site, layer)
+        except Exception as e:                # noqa: BLE001 — lint surface
+            out.append(err("SITE-RESOLVE",
+                           f"resolve raised {type(e).__name__}: {e}", sub))
+            continue
+        if cc is None or not cc.enabled:
+            continue
+        if cc.scheme not in ALLOWED_SCHEMES[site]:
+            out.append(err("SITE-SCHEME",
+                           f"scheme {cc.scheme!r} is not implementable "
+                           f"at site {site!r} (allowed: "
+                           f"{sorted(ALLOWED_SCHEMES[site])})", sub))
+        if cc not in seen:
+            seen.add(cc)
+            out += _roundtrip(cc, sub)
+    # EF residual demands a live grad site
+    if policy.grad_ef:
+        gc = policy.resolve("grad")
+        if gc is None or not gc.enabled or gc.scheme == "nccl":
+            out.append(err("SITE-EF",
+                           "grad_ef is set but the grad site resolves "
+                           "exact/disabled — the EF residual would "
+                           "never be consumed", prefix + "site=grad"))
+    # scan segmentation invariant
+    try:
+        segs = policy_segments(cfg, policy)
+    except Exception as e:                    # noqa: BLE001 — lint surface
+        out.append(err("SITE-SEGMENT",
+                       f"policy_segments raised {type(e).__name__}: {e}",
+                       prefix.strip()))
+        return out
+    flat = [r for s, e in segs for r in range(s, e)]
+    if flat != list(range(cfg.pattern_repeats)):
+        out.append(err("SITE-SEGMENT",
+                       f"segments {segs} do not partition the "
+                       f"{cfg.pattern_repeats} pattern repeats",
+                       prefix.strip()))
+    uniform = all(getattr(policy, s).kind == "uniform"
+                  for s in LAYER_SITES)
+    if uniform and len(segs) != 1:
+        out.append(err("SITE-SEGMENT",
+                       f"uniform policy produced {len(segs)} scan "
+                       f"segments (must be exactly 1 — the HLO-size "
+                       f"invariant)", prefix.strip()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the trace lane: lower a real train step under a recording policy
+# ---------------------------------------------------------------------------
+
+def make_recording_policy(policy: CommPolicy, log: Set[SiteAddr]
+                          ) -> CommPolicy:
+    """A policy whose ``resolve`` logs every (site, layer) it is asked
+    for, then delegates. Built as a dynamic subclass so
+    ``dataclasses.replace`` (inside ``bind`` / ``map_sites``) keeps
+    returning recording instances sharing the same log."""
+
+    def resolve(self, site, layer=None, n_layers=None):
+        log.add((site, layer if isinstance(layer, int) else None))
+        return CommPolicy.resolve(self, site, layer, n_layers)
+
+    cls = type("RecordingPolicy", (CommPolicy,), {"resolve": resolve})
+    fields = {f.name: getattr(policy, f.name)
+              for f in dataclasses.fields(CommPolicy)}
+    return cls(**fields)
+
+
+def trace_train_sites(arch: str, policy: CommPolicy,
+                      subject: str = "") -> List[Diagnostic]:
+    """Lower one smoke-size train step and check the resolve log.
+
+    Tracing only — nothing executes, so this runs on CPU in seconds.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.model import param_groups
+    from repro.parallel.plan import make_plan
+    from repro.parallel.shardings import build_store
+    from repro.train.data import DataConfig, make_dataset, to_device
+    from repro.train.optim import OptimConfig
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = get_smoke_config(arch)
+    sub = subject or f"trace {arch}"
+    log: Set[SiteAddr] = set()
+    rec = make_recording_policy(policy, log)
+    mesh = make_test_mesh()
+    plan = make_plan(cfg, tp=1, fsdp=1)
+    store = build_store(param_groups(cfg, plan), plan,
+                        jax.random.PRNGKey(0), jnp.float32, mesh)
+    opt_cfg = OptimConfig(lr=1e-3, warmup_steps=2, total_steps=4)
+    opt = init_train_state(store, opt_cfg)
+    enc = cfg.encoder.n_ctx if (cfg.is_enc_dec or cfg.has_cross) else None
+    ds = make_dataset(DataConfig(vocab=cfg.vocab, seq_len=16,
+                                 global_batch=2, enc_ctx=enc,
+                                 d_model=cfg.d_model))
+    batch = to_device(ds.batch(0))
+    step = make_train_step(cfg, plan, rec, opt_cfg, mesh, global_batch=2)
+    try:
+        step.lower(store, opt, batch)    # trace, no execution
+    except Exception as e:                    # noqa: BLE001 — lint surface
+        return [err("SITE-TRACE",
+                    f"train-step trace raised {type(e).__name__}: {e}",
+                    sub)]
+
+    out: List[Diagnostic] = []
+    logged_sites = {s for s, _ in log}
+    # a2a is only addressed by moe blocks; everything else must appear
+    expect = {s for s in SITES if s != "a2a"}
+    if any(k == "moe" for k in cfg.layer_kinds):
+        expect.add("a2a")
+    missing = expect - logged_sites
+    if missing:
+        out.append(err("SITE-TRACE",
+                       f"sites {sorted(missing)} were never resolved "
+                       f"during the train-step trace — comm there "
+                       f"bypasses the policy engine", sub))
+    unknown = logged_sites - set(SITES)
+    if unknown:
+        out.append(err("SITE-TRACE",
+                       f"trace resolved unknown sites {sorted(unknown)}",
+                       sub))
+    bad_layers = {(s, lyr) for s, lyr in log
+                  if lyr is not None and not 0 <= lyr < cfg.n_layers}
+    if bad_layers:
+        out.append(err("SITE-TRACE",
+                       f"trace resolved out-of-range layer indices "
+                       f"{sorted(bad_layers)} (n_layers={cfg.n_layers})",
+                       sub))
+    layer_logged = {s for s, lyr in log if lyr is not None}
+    need_layered = {"tp", "tp_bwd"} | ({"a2a"} if "a2a" in expect
+                                       else set())
+    if not need_layered <= layer_logged:
+        out.append(err("SITE-TRACE",
+                       f"layer sites {sorted(need_layered - layer_logged)} "
+                       f"were never resolved at a concrete layer", sub))
+    return out

@@ -1,0 +1,124 @@
+"""VMEM budgeting: bound kernel footprints against ~16 MB/core.
+
+Two families of Pallas kernels stage comm state in VMEM:
+
+* the **codec kernels** (quant/dequant/wire encode/decode) tile an
+  ``(rows, n)`` float array by ``ops._pick_block`` — the analyzer proves
+  the chosen block respects the 8-sublane quantum and that one grid
+  step's tiles (float input + wire output, double-buffered) fit the
+  budget (VMEM-BLOCK);
+* the **RDMA kernels** hold whole per-phase operands plus ``(rows, wb)``
+  wire staging buffers with no grid tiling at all — their footprint is
+  a function of the exact launch payload and axis size, so the analyzer
+  computes it from the same shapes ``pallas_call`` would allocate and
+  rejects configurations that cannot fit (VMEM-OVERFLOW) *before*
+  compilation.
+
+Footprints are estimates on the conservative side: operands count at
+float32 width, and decode/splice temporaries are included, but compiler
+scheduling slack is not — a PASS here is "plausibly compilable", a FAIL
+is "provably not".
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.analysis.report import Diagnostic, err
+from repro.core.comm_config import CommConfig
+from repro.kernels.ops import _TILE_BUDGET, _pick_block
+from repro.kernels.quant_pack import ROW_BLOCK
+
+#: per-core VMEM budget (v4/v5 order of magnitude; see the TPU guide).
+VMEM_BUDGET = 16 * 2**20
+
+
+def codec_tile_bytes(cfg: CommConfig, rows: int, n: int) -> int:
+    """One grid step of the fused wire codec, double-buffered: a
+    ``(block, n)`` float32 tile plus its ``(block, wire_bytes)`` output."""
+    block = _pick_block(rows, n, on_tpu=True)
+    per_step = block * (4 * n + cfg.wire_bytes(n))
+    return 2 * per_step            # pallas double-buffers grid steps
+
+
+def allreduce_vmem_bytes(cfg: CommConfig, n: int,
+                         tp: int) -> List[Tuple[str, int]]:
+    """Per-phase footprints of the fused AR on an (n,) payload.
+
+    Scatter: ``(tp, chunk)`` f32 input + decode/splice temporaries of
+    the same shape, the ``(1, chunk)`` partial, and two ``(tp, wb)``
+    staging buffers. Gather: ``(tp, chunk)`` output + decode temporary,
+    the partial input, ``(1, wb)`` + ``(tp, wb)`` staging.
+    """
+    chunk = -(-n // tp)
+    wb = cfg.wire_layout(-(-chunk // cfg.group) * cfg.group).total
+    scatter = 2 * (4 * tp * chunk) + 4 * chunk + 2 * tp * wb
+    gather = 2 * (4 * tp * chunk) + 4 * chunk + (tp + 1) * wb
+    return [("allreduce_scatter_reduce", scatter),
+            ("allreduce_gather", gather)]
+
+
+def a2a_vmem_bytes(cfg: CommConfig, tp: int, m: int,
+                   d: int) -> List[Tuple[str, int]]:
+    """Footprint of the fused A2A on a (tp, m, d) block tensor: input +
+    output + decode temporary at f32, the encoded wire, and the two
+    ``(tp, m*wb)`` staging buffers."""
+    wb = cfg.wire_layout(-(-d // cfg.group) * cfg.group).total
+    total = 3 * (4 * tp * m * d) + 3 * (tp * m * wb)
+    return [("all2all", total)]
+
+
+def check_codec_block(cfg: CommConfig, rows: int, n: int,
+                      subject: str) -> List[Diagnostic]:
+    """VMEM-BLOCK: the ops._pick_block contract for one codec launch."""
+    out: List[Diagnostic] = []
+    block = _pick_block(rows, n, on_tpu=True)
+    if block % ROW_BLOCK:
+        out.append(err("VMEM-BLOCK",
+                       f"block {block} for ({rows}, {n}) is not a "
+                       f"multiple of the {ROW_BLOCK}-sublane quantum",
+                       subject))
+    if block > ROW_BLOCK and 4 * block * n > 2 * _TILE_BUDGET:
+        out.append(err("VMEM-BLOCK",
+                       f"float tile {4 * block * n} bytes for "
+                       f"({rows}, {n}) blows the {_TILE_BUDGET}-byte "
+                       f"tile budget", subject))
+    # padding waste must stay under one quantum (the even-split contract)
+    steps = -(-rows // block)
+    if steps * block - rows >= block and rows > 0:
+        out.append(err("VMEM-BLOCK",
+                       f"block {block} pads ({rows}, {n}) by a whole "
+                       f"empty grid step", subject))
+    tile = codec_tile_bytes(cfg, rows, n)
+    if tile > VMEM_BUDGET:
+        out.append(err("VMEM-OVERFLOW",
+                       f"codec grid step needs {tile} bytes "
+                       f"(> {VMEM_BUDGET} VMEM budget)", subject))
+    return out
+
+
+def check_kernel_vmem(kernels: List[Tuple[str, int]],
+                      subject: str) -> List[Diagnostic]:
+    """VMEM-OVERFLOW for precomputed (kernel, footprint) pairs."""
+    out: List[Diagnostic] = []
+    for name, nbytes in kernels:
+        if nbytes > VMEM_BUDGET:
+            out.append(err("VMEM-OVERFLOW",
+                           f"{name} needs ~{nbytes / 2**20:.1f} MB VMEM "
+                           f"(> {VMEM_BUDGET // 2**20} MB budget) — "
+                           f"payload too large for the unblocked RDMA "
+                           f"staging; shrink the payload or use an XLA "
+                           f"scheme", subject))
+    return out
+
+
+def check_vmem_static() -> Tuple[List[Diagnostic], int]:
+    """Shape-independent sweep of the block chooser across
+    representative codec shapes; returns (diags, checked)."""
+    cfg = CommConfig()
+    out: List[Diagnostic] = []
+    checked = 0
+    for rows in (1, 7, 8, 65, 1024, 16384):
+        for n in (128, 4096, 16384, 65536):
+            out += check_codec_block(cfg, rows, n, f"rows={rows} n={n}")
+            checked += 1
+    return out, checked

@@ -1,0 +1,206 @@
+"""RDMA choreography declared as data (the commcheck substrate).
+
+Every Pallas RDMA kernel in this package declares its per-rank protocol
+— barrier signalling, per-peer ``make_async_remote_copy`` semaphore
+slots, buffer lifetimes, the barrier ``collective_id`` — as a
+:class:`KernelProtocol` value. The declarations have two consumers:
+
+* the kernels **execute** them: ``_ring_barrier`` / ``_push_rows`` in
+  :mod:`repro.kernels.rdma_allreduce` walk ``proto.barrier`` /
+  ``proto.pushes`` step by step, and the ``pallas_call`` scratch shapes
+  and ``collective_id`` come straight from the protocol fields;
+* the analyzer **checks** them: :mod:`repro.analysis.choreography`
+  instantiates the same protocol for every rank, builds the N-rank
+  happens-before graph, simulates the counting semaphores and proves
+  deadlock-freedom, signal/wait matching, per-peer slot consistency and
+  buffer write-before-wait safety for every mesh shape the launch CLIs
+  accept.
+
+One declaration, two consumers: the metadata cannot rot apart from the
+kernels, and a choreography bug is a static analysis failure instead of
+silent cross-rank corruption on hardware.
+
+Row symbols: a ``PushStep`` row is either a concrete int or one of the
+symbols ``"my"`` (this rank's index along the communicated axis) /
+``"dst"`` (the destination peer's index). The kernels resolve symbols to
+traced values (:func:`resolve_row` with ``lax`` ints); the analyzer
+resolves them to concrete Python ints per simulated rank.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple, Union
+
+RowSym = Union[int, str]          # int | "my" | "dst"
+
+#: Program opcodes (see :class:`KernelProtocol.program`).
+WRITE = "write"      # local write into a staging buffer
+BARRIER = "barrier"  # ring barrier: signal all peers, wait for them
+PUSH = "push"        # start every PushStep's make_async_remote_copy
+WAIT = "wait"        # wait on every started descriptor (send + recv)
+READ = "read"        # local read of a buffer (decode / splice)
+
+
+class PushStep(NamedTuple):
+    """One ``make_async_remote_copy`` issued by every rank (SPMD).
+
+    The destination peer is ``(my + dst_off) % tp`` along the
+    communicated axis; the copy moves ``src_buf[src_row]`` into the
+    peer's ``dst_buf[dst_row]``, signalling the local ``send_sem`` slot
+    ``send_slot`` when the bytes left and the *remote* ``recv_sem`` slot
+    ``recv_slot`` when they landed. ``wait()`` on the descriptor blocks
+    on both local slots — by SPMD symmetry the local recv wait at slot
+    ``recv_slot`` pairs with the incoming push from peer
+    ``(my - dst_off) % tp``.
+    """
+    dst_off: int
+    src_row: RowSym
+    dst_row: RowSym
+    send_slot: int
+    recv_slot: int
+
+
+class RingBarrier(NamedTuple):
+    """Barrier plan: signal the global barrier semaphore of each peer at
+    ``(my + off) % tp`` (``inc=1`` per offset), then wait until the own
+    barrier count reaches ``wait_count``."""
+    signal_offsets: Tuple[int, ...]
+    wait_count: int
+
+
+class BufferSpec(NamedTuple):
+    """Lifetime role of one VMEM comm scratch buffer.
+
+    ``remote_writable`` buffers are RDMA landing zones: peers write into
+    them, so they must be live (post-barrier) before any push starts and
+    must not be read before the matching waits complete.
+    """
+    name: str
+    rows: int
+    remote_writable: bool
+
+
+class KernelProtocol(NamedTuple):
+    """The full per-rank choreography of one RDMA kernel.
+
+    ``program`` is the rank-local op order — tuples of
+    ``(WRITE, buf) | (BARRIER,) | (PUSH,) | (WAIT,) | (READ, buf)`` —
+    the happens-before skeleton the analyzer simulates. ``sem_slots`` is
+    the length of each DMA semaphore array (send and recv), and
+    ``collective_id`` the barrier-semaphore identity that must be unique
+    among kernels live in one compiled program.
+    """
+    name: str
+    collective_id: int
+    sem_slots: int
+    buffers: Tuple[BufferSpec, ...]
+    barrier: RingBarrier
+    pushes: Tuple[PushStep, ...]
+    push_src: str
+    push_dst: str
+    program: Tuple[Tuple[str, ...], ...]
+
+    def buffer(self, name: str) -> BufferSpec:
+        for b in self.buffers:
+            if b.name == name:
+                return b
+        raise KeyError(name)
+
+
+def resolve_row(sym: RowSym, my, dst):
+    """Resolve a row symbol against (my, dst) — traced ints in the
+    kernels, concrete ints in the analyzer."""
+    if sym == "my":
+        return my
+    if sym == "dst":
+        return dst
+    return sym
+
+
+def ring_barrier(tp: int) -> RingBarrier:
+    """The standard all-peers ring barrier: signal every other rank on
+    the axis once, wait for the tp-1 symmetric signals."""
+    return RingBarrier(signal_offsets=tuple(range(1, tp)),
+                       wait_count=tp - 1)
+
+
+def ring_pushes(tp: int, src_row: RowSym, dst_row: RowSym
+                ) -> Tuple[PushStep, ...]:
+    """The shared per-peer push plan: iteration ``i`` sends to peer
+    ``my + i`` using semaphore slot ``i - 1`` in both directions (the
+    matching receive at slot ``i - 1`` comes from peer ``my - i``)."""
+    return tuple(PushStep(dst_off=i, src_row=src_row, dst_row=dst_row,
+                          send_slot=i - 1, recv_slot=i - 1)
+                 for i in range(1, tp))
+
+
+def _standard_program(src: str, dst: str) -> Tuple[Tuple[str, ...], ...]:
+    """write staging -> barrier -> push -> wait -> read (decode)."""
+    return ((WRITE, src), (BARRIER,), (PUSH,), (WAIT,),
+            (READ, dst), (READ, src))
+
+
+# ---------------------------------------------------------------------------
+# the shipped protocols
+# ---------------------------------------------------------------------------
+
+# Barrier-semaphore identities. The AllReduce claims 0 (scatter-reduce)
+# and 1 (gather); the A2A kernel must not alias either since all three
+# can be live in one compiled train step.
+ALLREDUCE_SCATTER_COLLECTIVE_ID = 0
+ALLREDUCE_GATHER_COLLECTIVE_ID = 1
+A2A_COLLECTIVE_ID = 2
+
+
+def allreduce_scatter_protocol(tp: int) -> KernelProtocol:
+    """Phase 1 of the fused AR: encode tp chunk rows, push row ``dst``
+    of the send staging to peer ``dst``'s receive row ``my``, decode +
+    reduce the received rows (own row spliced locally)."""
+    return KernelProtocol(
+        name="allreduce_scatter_reduce",
+        collective_id=ALLREDUCE_SCATTER_COLLECTIVE_ID,
+        sem_slots=tp - 1,
+        buffers=(BufferSpec("send", tp, False),
+                 BufferSpec("recv", tp, True)),
+        barrier=ring_barrier(tp),
+        pushes=ring_pushes(tp, src_row="dst", dst_row="my"),
+        push_src="send", push_dst="recv",
+        program=_standard_program("send", "recv"))
+
+
+def allreduce_gather_protocol(tp: int) -> KernelProtocol:
+    """Phase 2 of the fused AR: encode the single partial-sum row, push
+    it into every peer's gather row ``my``, decode all tp rows."""
+    return KernelProtocol(
+        name="allreduce_gather",
+        collective_id=ALLREDUCE_GATHER_COLLECTIVE_ID,
+        sem_slots=tp - 1,
+        buffers=(BufferSpec("send", 1, False),
+                 BufferSpec("recv", tp, True)),
+        barrier=ring_barrier(tp),
+        pushes=ring_pushes(tp, src_row=0, dst_row="my"),
+        push_src="send", push_dst="recv",
+        program=_standard_program("send", "recv"))
+
+
+def all2all_protocol(tp: int) -> KernelProtocol:
+    """The fused A2A: encode tp per-peer blocks, push block ``dst`` to
+    peer ``dst``'s receive row ``my`` (lax.all_to_all order), decode."""
+    return KernelProtocol(
+        name="all2all",
+        collective_id=A2A_COLLECTIVE_ID,
+        sem_slots=tp - 1,
+        buffers=(BufferSpec("send", tp, False),
+                 BufferSpec("recv", tp, True)),
+        barrier=ring_barrier(tp),
+        pushes=ring_pushes(tp, src_row="dst", dst_row="my"),
+        push_src="send", push_dst="recv",
+        program=_standard_program("send", "recv"))
+
+
+def live_protocols(tp: int) -> Tuple[KernelProtocol, ...]:
+    """Every RDMA protocol that can be live in ONE compiled program (a
+    train step runs the AR phases and the MoE A2A in the same module) —
+    the collective_id collision-check set."""
+    return (allreduce_scatter_protocol(tp),
+            allreduce_gather_protocol(tp),
+            all2all_protocol(tp))

@@ -45,27 +45,26 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 from repro.core.comm_config import CommConfig
+from repro.kernels.protocol import A2A_COLLECTIVE_ID, all2all_protocol
 from repro.kernels.rdma_allreduce import (_cfg_kw, _push_rows,
                                           _ring_barrier)
 from repro.kernels.wire import decode_tile, encode_tile
 
-# AllReduce claims collective_ids 0 (scatter-reduce) and 1 (gather);
-# the A2A kernel's barrier semaphore must not alias either.
-A2A_COLLECTIVE_ID = 2
+__all__ = ["A2A_COLLECTIVE_ID", "fused_all_to_all_rdma"]
 
 
 def _a2a_kernel(x_ref, out_ref, send_buf, recv_buf, send_sem, recv_sem,
                 *, axis: str, mesh_axes: Sequence[str], tp: int, m: int,
-                kw: dict, out_dtype):
+                kw: dict, out_dtype, proto):
     my = lax.axis_index(axis)
     wire = encode_tile(x_ref[...], **kw)                  # (tp*m, wb)
     wb = wire.shape[1]
     send_buf[...] = wire.reshape(tp, m * wb)
-    _ring_barrier(my, tp, axis, mesh_axes)
+    _ring_barrier(my, tp, axis, mesh_axes, proto.barrier)
     # push block p of my wire to peer p; it lands in recv_buf[my] there,
     # so recv_buf[j] here is peer j's block my — lax.all_to_all order
-    _push_rows(send_buf, recv_buf, my, send_sem, recv_sem, my, tp,
-               axis, mesh_axes)
+    _push_rows(send_buf, recv_buf, send_sem, recv_sem, my, tp,
+               axis, mesh_axes, proto)
     # own block never crossed the link: splice send row my in at row my
     iota = lax.broadcasted_iota(jnp.int32, (tp, m * wb), 0)
     mixed = jnp.where(iota == my, send_buf[...], recv_buf[...])
@@ -97,18 +96,22 @@ def fused_all_to_all_rdma(x: jnp.ndarray, axis: str, cfg: CommConfig,
     assert axis in mesh_axes, (axis, mesh_axes)
     kw = _cfg_kw(cfg, d)
 
+    # scratch shapes and the collective id come from the declared
+    # protocol (repro.kernels.protocol) — the object commcheck verifies
+    proto = all2all_protocol(tp)
     out = pl.pallas_call(
         functools.partial(_a2a_kernel, axis=axis, mesh_axes=mesh_axes,
-                          tp=tp, m=m, kw=kw, out_dtype=x.dtype),
+                          tp=tp, m=m, kw=kw, out_dtype=x.dtype,
+                          proto=proto),
         out_shape=jax.ShapeDtypeStruct((tp * m, d), x.dtype),
         scratch_shapes=[
-            pltpu.VMEM((tp, m * wb), jnp.uint8),   # send staging
-            pltpu.VMEM((tp, m * wb), jnp.uint8),   # per-sender receive
-            pltpu.SemaphoreType.DMA((tp - 1,)),
-            pltpu.SemaphoreType.DMA((tp - 1,)),
+            pltpu.VMEM((proto.buffer("send").rows, m * wb), jnp.uint8),
+            pltpu.VMEM((proto.buffer("recv").rows, m * wb), jnp.uint8),
+            pltpu.SemaphoreType.DMA((proto.sem_slots,)),
+            pltpu.SemaphoreType.DMA((proto.sem_slots,)),
         ],
         compiler_params=pltpu.TPUCompilerParams(
-            collective_id=A2A_COLLECTIVE_ID),
+            collective_id=proto.collective_id),
     )(x.reshape(tp * m, d))
 
     return out.reshape(x.shape)

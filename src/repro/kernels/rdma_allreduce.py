@@ -23,6 +23,14 @@ Addressing uses ``DeviceIdType.MESH`` coordinates so the kernel works on
 multi-axis meshes: ``mesh_axes`` names every mesh axis in order and the
 peer coordinate only varies along the communicated ``axis``.
 
+The choreography itself — barrier signalling, per-peer semaphore slots,
+buffer lifetimes, the barrier ``collective_id`` — is declared as data in
+:mod:`repro.kernels.protocol` and *executed* here: ``_ring_barrier`` and
+``_push_rows`` walk the declared plan, and the ``pallas_call`` scratch
+shapes come from the protocol fields. The same declaration is what
+:mod:`repro.analysis.choreography` statically verifies (deadlock
+freedom, slot matching, write-before-wait races) per mesh shape.
+
 Off TPU this cannot execute (remote DMA has no CPU lowering on the
 pinned jax); :mod:`repro.kernels.emulate` runs the same tile bodies with
 the push emulated by XLA collectives, and :func:`repro.kernels.ops.
@@ -42,6 +50,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 from repro.core.comm_config import CommConfig
+from repro.kernels.protocol import (KernelProtocol, RingBarrier,
+                                    allreduce_gather_protocol,
+                                    allreduce_scatter_protocol,
+                                    resolve_row)
 from repro.kernels.wire import _cfg_kw, decode_tile, encode_tile_into
 
 
@@ -51,35 +63,40 @@ def _peer_coords(dst, axis: str, mesh_axes: Sequence[str]):
                  for a in mesh_axes)
 
 
-def _ring_barrier(my, tp: int, axis: str, mesh_axes: Sequence[str]):
-    """Block until every peer on ``axis`` reached this point: all comm
+def _ring_barrier(my, tp: int, axis: str, mesh_axes: Sequence[str],
+                  plan: RingBarrier):
+    """Execute the declared barrier plan: signal each peer at
+    ``(my + off) % tp`` once, wait for the symmetric signals — all comm
     scratch buffers are live before any RDMA lands in them."""
     barrier = pltpu.get_barrier_semaphore()
-    for i in range(1, tp):
+    for off in plan.signal_offsets:
         pltpu.semaphore_signal(
             barrier, inc=1,
-            device_id=_peer_coords((my + i) % tp, axis, mesh_axes),
+            device_id=_peer_coords(lax.rem(my + off, tp), axis, mesh_axes),
             device_id_type=pltpu.DeviceIdType.MESH)
-    pltpu.semaphore_wait(barrier, tp - 1)
+    pltpu.semaphore_wait(barrier, plan.wait_count)
 
 
-def _push_rows(src_buf, dst_buf, dst_row, send_sem, recv_sem, my, tp: int,
-               axis: str, mesh_axes: Sequence[str], src_row=None):
-    """Start tp-1 RDMA pushes and wait for the symmetric receives.
+def _push_rows(src_buf, dst_buf, send_sem, recv_sem, my, tp: int,
+               axis: str, mesh_axes: Sequence[str],
+               proto: KernelProtocol):
+    """Execute the declared push plan: start every ``PushStep``'s RDMA
+    and wait for the symmetric receives.
 
-    Iteration ``i`` sends to peer ``my + i`` and (by SPMD symmetry) the
-    matching receive into semaphore slot ``i - 1`` comes from peer
-    ``my - i``; waiting on each descriptor covers both directions.
+    Step ``dst_off=i`` sends to peer ``my + i`` and (by SPMD symmetry)
+    the matching receive into semaphore slot ``recv_slot`` comes from
+    peer ``my - i``; waiting on each descriptor covers both directions.
     """
     rdmas = []
-    for i in range(1, tp):
-        dst = lax.rem(my + i, tp)
-        row = dst if src_row is None else src_row
+    for step in proto.pushes:
+        dst = lax.rem(my + step.dst_off, tp)
+        src_row = resolve_row(step.src_row, my, dst)
+        dst_row = resolve_row(step.dst_row, my, dst)
         rdma = pltpu.make_async_remote_copy(
-            src_ref=src_buf.at[pl.ds(row, 1)],
+            src_ref=src_buf.at[pl.ds(src_row, 1)],
             dst_ref=dst_buf.at[pl.ds(dst_row, 1)],
-            send_sem=send_sem.at[i - 1],
-            recv_sem=recv_sem.at[i - 1],
+            send_sem=send_sem.at[step.send_slot],
+            recv_sem=recv_sem.at[step.recv_slot],
             device_id=_peer_coords(dst, axis, mesh_axes),
             device_id_type=pltpu.DeviceIdType.MESH)
         rdma.start()
@@ -94,16 +111,17 @@ def _push_rows(src_buf, dst_buf, dst_row, send_sem, recv_sem, my, tp: int,
 
 def _scatter_reduce_kernel(x_ref, partial_ref, send_buf, recv_buf,
                            send_sem, recv_sem, *, axis: str,
-                           mesh_axes: Sequence[str], tp: int, kw: dict):
+                           mesh_axes: Sequence[str], tp: int, kw: dict,
+                           proto: KernelProtocol):
     my = lax.axis_index(axis)
     # encode the tp per-peer rows section-by-section straight into the
     # send staging buffer at wire_layout offsets (no concatenate pass)
     encode_tile_into(x_ref[...], send_buf, **kw)          # (tp, wb)
     wire = send_buf[...]
-    _ring_barrier(my, tp, axis, mesh_axes)
+    _ring_barrier(my, tp, axis, mesh_axes, proto.barrier)
     # push row p of my wire to peer p; it lands in recv_buf[my] over there
-    _push_rows(send_buf, recv_buf, my, send_sem, recv_sem, my, tp,
-               axis, mesh_axes)
+    _push_rows(send_buf, recv_buf, send_sem, recv_sem, my, tp,
+               axis, mesh_axes, proto)
     # own chunk never crossed the link: splice wire[my] in at row my
     iota = lax.broadcasted_iota(jnp.int32, wire.shape, 0)
     mixed = jnp.where(iota == my, wire, recv_buf[...])
@@ -113,14 +131,15 @@ def _scatter_reduce_kernel(x_ref, partial_ref, send_buf, recv_buf,
 
 def _gather_kernel(partial_ref, out_ref, send_buf, gather_buf,
                    send_sem, recv_sem, *, axis: str,
-                   mesh_axes: Sequence[str], tp: int, kw: dict):
+                   mesh_axes: Sequence[str], tp: int, kw: dict,
+                   proto: KernelProtocol):
     my = lax.axis_index(axis)
     encode_tile_into(partial_ref[...], send_buf, **kw)    # (1, wb)
     wire = send_buf[...]
-    _ring_barrier(my, tp, axis, mesh_axes)
+    _ring_barrier(my, tp, axis, mesh_axes, proto.barrier)
     # push my (single) partial-sum row into every peer's slot my
-    _push_rows(send_buf, gather_buf, my, send_sem, recv_sem, my, tp,
-               axis, mesh_axes, src_row=0)
+    _push_rows(send_buf, gather_buf, send_sem, recv_sem, my, tp,
+               axis, mesh_axes, proto)
     iota = lax.broadcasted_iota(jnp.int32, (tp, wire.shape[1]), 0)
     gathered = jnp.where(iota == my,
                          jnp.broadcast_to(wire, (tp, wire.shape[1])),
@@ -153,28 +172,34 @@ def fused_all_reduce_rdma(x: jnp.ndarray, axis: str, cfg: CommConfig,
     kw = _cfg_kw(cfg, chunk)
 
     comm = dict(axis=axis, mesh_axes=mesh_axes, tp=tp, kw=kw)
+    # scratch shapes and collective ids come from the declared protocol
+    # — the same object repro.analysis.choreography statically verifies
+    sp = allreduce_scatter_protocol(tp)
     partial = pl.pallas_call(
-        functools.partial(_scatter_reduce_kernel, **comm),
+        functools.partial(_scatter_reduce_kernel, proto=sp, **comm),
         out_shape=jax.ShapeDtypeStruct((1, chunk), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((tp, wb), jnp.uint8),       # send staging
-            pltpu.VMEM((tp, wb), jnp.uint8),       # per-sender receive
-            pltpu.SemaphoreType.DMA((tp - 1,)),
-            pltpu.SemaphoreType.DMA((tp - 1,)),
+            pltpu.VMEM((sp.buffer("send").rows, wb), jnp.uint8),
+            pltpu.VMEM((sp.buffer("recv").rows, wb), jnp.uint8),
+            pltpu.SemaphoreType.DMA((sp.sem_slots,)),
+            pltpu.SemaphoreType.DMA((sp.sem_slots,)),
         ],
-        compiler_params=pltpu.TPUCompilerParams(collective_id=0),
+        compiler_params=pltpu.TPUCompilerParams(
+            collective_id=sp.collective_id),
     )(x.reshape(tp, chunk).astype(jnp.float32))
 
+    gp = allreduce_gather_protocol(tp)
     full = pl.pallas_call(
-        functools.partial(_gather_kernel, **comm),
+        functools.partial(_gather_kernel, proto=gp, **comm),
         out_shape=jax.ShapeDtypeStruct((tp, chunk), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((1, wb), jnp.uint8),        # send staging
-            pltpu.VMEM((tp, wb), jnp.uint8),       # gather buffer
-            pltpu.SemaphoreType.DMA((tp - 1,)),
-            pltpu.SemaphoreType.DMA((tp - 1,)),
+            pltpu.VMEM((gp.buffer("send").rows, wb), jnp.uint8),
+            pltpu.VMEM((gp.buffer("recv").rows, wb), jnp.uint8),
+            pltpu.SemaphoreType.DMA((gp.sem_slots,)),
+            pltpu.SemaphoreType.DMA((gp.sem_slots,)),
         ],
-        compiler_params=pltpu.TPUCompilerParams(collective_id=1),
+        compiler_params=pltpu.TPUCompilerParams(
+            collective_id=gp.collective_id),
     )(partial)
 
     return full.reshape(n).astype(x.dtype)

@@ -238,6 +238,20 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     batch = input_specs(cfg, shape_name, mesh, lp.cache_len)
     micro = n_micro if n_micro is not None else lp.n_micro
 
+    # comm-safety pre-check: abort before the (expensive) lowering +
+    # cost analysis if any commcheck rule fires for this exact tuple
+    from repro.analysis.commcheck import launch_report
+    crep = launch_report(cfg, plan, pol, dict(mesh.shape),
+                         global_batch=shp.global_batch, seq=shp.seq_len,
+                         n_micro=micro or 1, mode=lp.mode,
+                         subject=f"{arch}/{shape_name}/{policy_name}")
+    if not crep.ok:
+        print(crep.format("[dryrun] commcheck", max_warnings=10))
+        rec.update(status="commcheck_failed",
+                   commcheck_errors=[d.format() for d in crep.errors])
+        return rec
+    rec["commcheck"] = "ok"
+
     with mesh:
         if lp.mode == "train":
             opt_cfg = OptimConfig()

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import commcheck
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.comm_config import SCHEMES
 from repro.core.policy import (BF16_POLICY, aggressive_policy,
@@ -50,6 +51,10 @@ def main(argv=None):
                          "enabled site: AllReduce sites and the MoE "
                          "dispatch A2A (e.g. 'fused' for the Pallas "
                          "RDMA kernels, 'nccl' for the exact baseline)")
+    ap.add_argument("--check", action="store_true",
+                    help="run the full commcheck pre-launch pass (site "
+                         "lint, choreography, layout/VMEM) and abort "
+                         "before compiling anything if a rule fires")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -63,6 +68,24 @@ def main(argv=None):
         policy = with_scheme(policy, args.comm_scheme)
     print(describe_policy(policy, cfg.n_layers))
     cache_len = args.prompt_len + args.gen
+
+    pol_name = args.policy_file or args.policy
+    mesh_shape = {"data": data_n, "model": model_n}
+    on_tpu = jax.default_backend() == "tpu"
+    if args.check:
+        rep = commcheck.launch_report(
+            cfg, plan, policy, mesh_shape, global_batch=args.batch,
+            seq=args.prompt_len, mode="prefill", tpu=on_tpu,
+            subject=f"{args.arch}/{pol_name}")
+        print(rep.format("[serve] commcheck", max_warnings=10))
+        if not rep.ok:
+            raise SystemExit(2)
+    # always on: fused-scheme launches that the RDMA kernels cannot
+    # serve fail here with diagnostics, not deep inside pallas_call
+    commcheck.check_fused_request(
+        cfg, plan, policy, mesh_shape, global_batch=args.batch,
+        seq=args.prompt_len, mode="prefill", tpu=on_tpu,
+        context=f"{args.arch}/{pol_name}")
 
     store = build_store(param_groups(cfg, plan), plan,
                         jax.random.PRNGKey(0), jnp.float32, mesh)

@@ -18,6 +18,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import commcheck
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.comm_config import SCHEMES
 from repro.core.policy import (BF16_POLICY, aggressive_policy,
@@ -67,6 +68,10 @@ def main(argv=None):
                          "enabled site: AllReduce sites and the MoE "
                          "dispatch A2A (e.g. 'fused' for the Pallas "
                          "RDMA kernels, 'nccl' for the exact baseline)")
+    ap.add_argument("--check", action="store_true",
+                    help="run the full commcheck pre-launch pass (site "
+                         "lint, choreography, layout/VMEM) and abort "
+                         "before compiling anything if a rule fires")
     ap.add_argument("--n-micro", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", default=None)
@@ -95,6 +100,25 @@ def main(argv=None):
           f"({cfg.active_param_count()/1e6:.1f}M active), mesh "
           f"{dict(mesh.shape)}, policy={pol_name}")
     print(describe_policy(policy, cfg.n_layers))
+
+    mesh_shape = {"data": data_n, "model": model_n}
+    if pod_n:
+        mesh_shape = {"pod": pod_n, **mesh_shape}
+    on_tpu = jax.default_backend() == "tpu"
+    if args.check:
+        rep = commcheck.launch_report(
+            cfg, plan, policy, mesh_shape, global_batch=args.batch,
+            seq=args.seq, n_micro=args.n_micro, mode="train", tpu=on_tpu,
+            subject=f"{args.arch}/{pol_name}")
+        print(rep.format("[train] commcheck", max_warnings=10))
+        if not rep.ok:
+            raise SystemExit(2)
+    # always on: fused-scheme launches that the RDMA kernels cannot
+    # serve fail here with diagnostics, not deep inside pallas_call
+    commcheck.check_fused_request(
+        cfg, plan, policy, mesh_shape, global_batch=args.batch,
+        seq=args.seq, n_micro=args.n_micro, mode="train", tpu=on_tpu,
+        context=f"{args.arch}/{pol_name}")
 
     grad_ef = wants_grad_ef(policy, mesh)
     if args.resume:
