@@ -4,7 +4,10 @@ the codec.
 bench_kernels times encode/decode in isolation; this bench times the
 whole quantized AllReduce — chunk + QDQ + hop + reduce + hop — for every
 scheme (uncompressed ``nccl`` psum baseline, XLA ``two_step``, the fused
-Pallas ``fused`` path, and the ``hierarchical`` variants) AND the MoE
+Pallas ``fused`` path, and the ``hierarchical`` variants), the
+error-feedback grad sync (``grad_ef``), the ZeRO-sharded quantized
+gradient reduce-scatter (``qgrad`` at 4/2 bit, plus the
+``qgrad_rot``-vs-``qgrad``@2 rotated-vs-spike A/B) AND the MoE
 dispatch All2All (``a2a_nccl`` exact baseline, ``a2a_two_step`` codec
 around ``lax.all_to_all``, ``a2a_fused`` single-kernel path) on 8 fake
 CPU devices, plus the exact per-rank wire footprint each scheme puts on
@@ -51,6 +54,7 @@ def _worker(fast: bool):
     from repro import compat
     from repro.core import (compressed_psum, compressed_psum_ef,
                             default_comm_config, dispatch_all_to_all)
+    from repro.core.collectives import quantized_reduce_scatter_ef
     from repro.launch.mesh import make_test_mesh
 
     rows = []
@@ -104,6 +108,26 @@ def _worker(fast: bool):
         e = jnp.zeros_like(x)
         return jax.jit(lambda v: f(v, e)), x
 
+    def qgrad_case(cfg, n):
+        # ZeRO-sharded gradient sync (the explicit post-VJP qgrad_rs
+        # pass in train_step): quantized+EF reduce-scatter over the
+        # 4-wide model axis standing in for the fsdp axis — rows track
+        # the qgrad wire cost and the rotated-vs-spike A/B at 2 bits
+        @functools.partial(compat.shard_map, mesh=mesh,
+                           in_specs=(P(("pod", "data", "model")),) * 2,
+                           out_specs=P(("pod", "data", "model")),
+                           check_vma=False)
+        def f(xs, es):
+            out, res = quantized_reduce_scatter_ef(xs[0], es[0],
+                                                   "model", cfg)
+            # out is the 1/tp shard, res the full-length residual;
+            # concatenate so both stages are materialized in the timing
+            return jnp.concatenate([out, res])[None]
+
+        x = jax.random.normal(jax.random.PRNGKey(3), (dev, n), jnp.float32)
+        e = jnp.zeros_like(x)
+        return jax.jit(lambda v: f(v, e)), x
+
     def a2a_case(cfg, n):
         # MoE-dispatch shape: tp per-peer blocks of n/tp values, d=512
         d = 512
@@ -139,6 +163,17 @@ def _worker(fast: bool):
             cfg = default_comm_config(bits)
             add(f"grad_ef@{bits}", bits, cfg, *ef_case(cfg, n),
                 cfg.wire_bytes(n))
+        for bits in (4, 2):   # ZeRO qgrad reduce-scatter (post-VJP pass)
+            cfg = default_comm_config(bits)
+            add(f"qgrad@{bits}", bits, cfg, *qgrad_case(cfg, n),
+                cfg.wire_bytes(n))
+        # rotated-vs-spike A/B at the 2-bit qgrad site: same transport,
+        # Hadamard-rotated quantizer instead of spike reserving — pair
+        # with qgrad@2 above (spike) to read the A/B; note the shorter
+        # wire (no spike sections)
+        cfg = default_comm_config(2).with_rotation()
+        add("qgrad_rot@2", 2, cfg, *qgrad_case(cfg, n),
+            cfg.wire_bytes(n))
         cfg = default_comm_config(8, scheme="nccl")
         add("a2a_nccl", 32, cfg, *a2a_case(cfg, n), 4 * n)
         for bits in BITS:

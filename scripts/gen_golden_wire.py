@@ -3,10 +3,11 @@
     PYTHONPATH=src python scripts/gen_golden_wire.py
 
 Writes tests/golden/wire_vectors.npz: a fixed 2-D input tensor ("x")
-plus its reference-backend encoded buffer for every width 2-8 x spike
-on/off (paper-default group sizes, BF16 metadata), and a fixed
-A2A-shaped per-peer-chunk tensor ("xa", (peers, rows, d)) plus its
-encoded per-peer wire chunks ("a2a_int*") for the same width x spike
+plus its reference-backend encoded buffer for every width 2-8 in each
+outlier mode — plain, spike reserving ("_sr") and randomized-Hadamard
+rotation ("_rot") — (paper-default group sizes, BF16 metadata), and a
+fixed A2A-shaped per-peer-chunk tensor ("xa", (peers, rows, d)) plus
+its encoded per-peer wire chunks ("a2a_int*") for the same width x mode
 grid — the exact blocks the fused All2All stages as RDMA chunks.
 tests/test_wire_golden.py asserts byte-for-byte equality against these
 on every codec backend and on the fused-collective encode paths, so a
@@ -34,10 +35,12 @@ PEERS, PEER_ROWS, PEER_D = 4, 2, 128     # A2A per-peer chunk shape
 SEED = 20250802
 
 
-def golden_cfg(bits: int, spike: bool) -> CommConfig:
-    """The pinned config per combo (paper-default group mapping)."""
+def golden_cfg(bits: int, spike: bool,
+               rotation: bool = False) -> CommConfig:
+    """The pinned config per combo (paper-default group mapping; both
+    default groups are powers of two, so rotation pins cleanly)."""
     return CommConfig(bits=bits, group=32 if bits <= 4 else 128,
-                      spike=spike, backend="ref")
+                      spike=spike, rotation=rotation, backend="ref")
 
 
 def golden_input() -> np.ndarray:
@@ -64,15 +67,17 @@ def main(out: str = OUT):
     x = golden_input()
     xa = golden_a2a_input()
     arrays = {"x": x, "xa": xa}
+    # (suffix, spike, rotation): the three outlier treatments
+    modes = (("", False, False), ("_sr", True, False),
+             ("_rot", False, True))
     for bits in range(2, 9):
-        for spike in (False, True):
-            cfg = golden_cfg(bits, spike)
-            sr = "_sr" if spike else ""
+        for tag, spike, rotation in modes:
+            cfg = golden_cfg(bits, spike, rotation)
             buf = codec.encode(jnp.asarray(x), cfg)
-            arrays[f"int{bits}{sr}"] = np.asarray(buf)
+            arrays[f"int{bits}{tag}"] = np.asarray(buf)
             # the A2A wire: per-peer chunks, (peers, rows, wire_bytes(d))
             bufa = codec.encode(jnp.asarray(xa), cfg)
-            arrays[f"a2a_int{bits}{sr}"] = np.asarray(bufa)
+            arrays[f"a2a_int{bits}{tag}"] = np.asarray(bufa)
     os.makedirs(os.path.dirname(out), exist_ok=True)
     np.savez(out, **arrays)
     total = sum(a.nbytes for a in arrays.values())

@@ -160,6 +160,7 @@ def launch_report(cfg, plan, policy: CommPolicy,
     rep = CheckReport()
     policy = policy.bind(cfg.n_layers)
     rep.extend(sites.check_policy_sites(cfg, policy, subject))
+    rep.extend(sites.check_qgrad_alignment(cfg, plan, policy, subject))
     tp = mesh_shape.get("model", 1)
     if tp >= 2:
         diags, n = choreography.check_choreography([tp])

@@ -200,6 +200,37 @@ def ef_without_grad() -> List[Diagnostic]:
     return sites.check_policy_sites(_model_cfg(), pol, "mutant")
 
 
+def ef_with_nccl_qgrad() -> List[Diagnostic]:
+    """grad_ef with grad dead AND qgrad_rs resolving to the exact nccl
+    scheme: neither residual consumer exists, SITE-EF must still fire
+    (the qgrad extension must not let an exact qgrad site satisfy it)."""
+    from repro.core.policy import CommPolicy
+    pol = CommPolicy(grad=None, grad_ef=True,
+                     qgrad_rs=CommConfig(bits=4, group=32, scheme="nccl"))
+    return sites.check_policy_sites(_model_cfg(), pol, "mutant")
+
+
+def bad_qgrad_scheme() -> List[Diagnostic]:
+    """Fused RDMA schedule at the qgrad reduce-scatter: the gather/
+    scatter sites are codec-wrapped XLA collectives with no kernel."""
+    from repro.core.policy import CommPolicy
+    pol = CommPolicy(qgrad_rs=CommConfig(bits=4, group=32,
+                                         scheme="fused"))
+    return sites.check_policy_sites(_model_cfg(), pol, "mutant")
+
+
+def qgrad_misaligned() -> List[Diagnostic]:
+    """A qgrad group size that no per-rank gradient shard of the model
+    is a multiple of: every parameter pads on the wire — exactly where
+    the old in-VJP path silently fell back to the exact psum_scatter."""
+    from repro.core.policy import CommPolicy
+    from repro.parallel.plan import make_plan
+    cfg = _model_cfg()
+    plan = make_plan(cfg, tp=2, fsdp=2)
+    pol = CommPolicy(qgrad_rs=CommConfig(bits=8, group=768))
+    return sites.check_qgrad_alignment(cfg, plan, pol, "mutant")
+
+
 # ---------------------------------------------------------------------------
 # the registry + runner
 # ---------------------------------------------------------------------------
@@ -228,6 +259,9 @@ FIXTURES: Dict[str, Tuple[Callable[[], List[Diagnostic]], str]] = {
     "unresolvable_site": (unresolvable_site, "SITE-RESOLVE"),
     "bad_a2a_scheme": (bad_a2a_scheme, "SITE-SCHEME"),
     "ef_without_grad": (ef_without_grad, "SITE-EF"),
+    "ef_with_nccl_qgrad": (ef_with_nccl_qgrad, "SITE-EF"),
+    "bad_qgrad_scheme": (bad_qgrad_scheme, "SITE-SCHEME"),
+    "qgrad_misaligned": (qgrad_misaligned, "SITE-QGRAD-ALIGN"),
 }
 
 

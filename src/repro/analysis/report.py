@@ -47,8 +47,13 @@ RULES = {
                     "model addresses",
     "SITE-SEGMENT": "scan segmentation broke its invariant (uniform "
                     "policy must yield exactly one segment)",
-    "SITE-EF": "grad_ef requested but the grad site is disabled — the "
-               "EF residual would never be consumed",
+    "SITE-EF": "grad_ef requested but neither the grad site nor the "
+               "qgrad_rs site resolves compressed — the EF residuals "
+               "would never be consumed",
+    "SITE-QGRAD-ALIGN": "a parameter's per-rank gradient shard is not "
+                        "group-aligned for the qgrad_rs reduce-scatter "
+                        "(chunks get padded; the old silent exact "
+                        "fallback hid exactly this)",
     "SITE-FUSED-MESH": "fused scheme requested on a mesh/payload the "
                        "RDMA kernels do not support",
     "SITE-TRACE": "jaxpr trace found comm sites not resolved through "

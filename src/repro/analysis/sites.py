@@ -19,8 +19,11 @@ and the per-step ``grad`` / ``qag`` / ``qgrad_rs`` sites — and verify:
   collective shape (the A2A dispatch is a single hop — hierarchical
   schemes have no (inner, outer) split there; the gather/scatter sites
   have no fused kernel);
-* **SITE-EF**: ``grad_ef`` only with an enabled grad site (otherwise
-  the EF residual is dead state);
+* **SITE-EF**: ``grad_ef`` only with an enabled grad or qgrad_rs site
+  (otherwise the EF residuals are dead state);
+* **SITE-QGRAD-ALIGN** (:func:`check_qgrad_alignment`): per-parameter
+  group alignment of the qgrad reduce-scatter shards — where the old
+  in-VJP version silently fell back to an exact psum_scatter;
 * **SITE-SEGMENT**: ``model.policy_segments`` must partition the
   repeats, and a depth-uniform policy must yield exactly ONE scan
   segment (the HLO-size invariant the segmented scan was built around).
@@ -40,7 +43,7 @@ from typing import List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.analysis.report import Diagnostic, err
+from repro.analysis.report import Diagnostic, err, warn
 from repro.core.comm_config import SCHEMES, CommConfig
 from repro.core.policy import LAYER_SITES, SITES, CommPolicy
 
@@ -138,14 +141,18 @@ def check_policy_sites(cfg, policy: CommPolicy,
         if cc not in seen:
             seen.add(cc)
             out += _roundtrip(cc, sub)
-    # EF residual demands a live grad site
+    # EF residual demands a live compressed site to correct: either the
+    # cross-pod grad AR or the sharded-DP qgrad_rs reduce-scatter.
     if policy.grad_ef:
-        gc = policy.resolve("grad")
-        if gc is None or not gc.enabled or gc.scheme == "nccl":
+        def dead(cc):
+            return cc is None or not cc.enabled or cc.scheme == "nccl"
+        if dead(policy.resolve("grad")) and \
+                dead(policy.resolve("qgrad_rs")):
             out.append(err("SITE-EF",
-                           "grad_ef is set but the grad site resolves "
-                           "exact/disabled — the EF residual would "
-                           "never be consumed", prefix + "site=grad"))
+                           "grad_ef is set but both the grad and the "
+                           "qgrad_rs sites resolve exact/disabled — the "
+                           "EF residuals would never be consumed",
+                           prefix + "site=grad"))
     # scan segmentation invariant
     try:
         segs = policy_segments(cfg, policy)
@@ -167,6 +174,46 @@ def check_policy_sites(cfg, policy: CommPolicy,
                        f"uniform policy produced {len(segs)} scan "
                        f"segments (must be exactly 1 — the HLO-size "
                        f"invariant)", prefix.strip()))
+    return out
+
+
+def check_qgrad_alignment(cfg, plan, policy: CommPolicy,
+                          subject: str = "") -> List[Diagnostic]:
+    """Alignment lint for the qgrad_rs reduce-scatter, per parameter.
+
+    The quantized gradient RS chunks each full-flat-length gradient into
+    ``fsdp`` shards and group-pads the shards. The old in-VJP version
+    silently fell back to an *exact* psum_scatter whenever
+    ``flat % (fsdp * group) != 0`` — the declared policy just never
+    applied. Now misalignment merely costs pad bytes, but it is still
+    worth surfacing: a warning per misaligned parameter (error if the
+    flat length cannot be sharded at all, which the store-layout padding
+    should make impossible).
+    """
+    from repro.models.model import param_groups
+    out: List[Diagnostic] = []
+    qc = policy.bind(cfg.n_layers).resolve("qgrad_rs")
+    if qc is None or not qc.enabled or qc.scheme == "nccl" \
+            or plan.fsdp <= 1:
+        return out
+    prefix = (subject + " ") if subject else ""
+    for gname, (_, specs) in sorted(param_groups(cfg, plan).items()):
+        for name, spec in sorted(specs.items()):
+            flat = spec.flat_len(plan)
+            sub = f"{prefix}site=qgrad_rs param={gname}/{name}"
+            if flat % plan.fsdp != 0:
+                out.append(err(
+                    "SITE-QGRAD-ALIGN",
+                    f"flat length {flat} is not divisible by "
+                    f"fsdp={plan.fsdp} — the gradient cannot be "
+                    f"reduce-scattered", sub))
+            elif (flat // plan.fsdp) % qc.group != 0:
+                out.append(warn(
+                    "SITE-QGRAD-ALIGN",
+                    f"per-rank shard {flat // plan.fsdp} is not a "
+                    f"multiple of group={qc.group} — chunks are padded "
+                    f"on the wire (the old silent exact fallback hid "
+                    f"this site)", sub))
     return out
 
 

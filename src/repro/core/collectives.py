@@ -129,17 +129,23 @@ def quantized_reduce_scatter(x: jnp.ndarray, axis: str,
     Transpose (bwd) is the exact all_gather of cotangents — the true
     transpose of a tiled reduce-scatter — so jax.grad through it under
     per-rank seeding is exact (tests/test_collective_properties.py).
+
+    Chunks are padded to the group size (and the pad sliced back off
+    after the summed decode — every rank pads the same tail positions of
+    its own chunk), so any ``n % tp == 0`` length compresses instead of
+    only ``group``-aligned ones. No-op for aligned sizes.
     """
     tp = compat.axis_size(axis)
     n = x.shape[-1]
     lead = x.shape[:-1]
     b = len(lead)
-    assert n % tp == 0 and (n // tp) % cfg.group == 0
-    xc = x.reshape(*lead, tp, n // tp)
+    assert n % tp == 0, (n, tp)
+    m = n // tp
+    xc = _pad_to(x.reshape(*lead, tp, m), cfg.group)
     wire = codec.encode(xc, cfg)
     recv = lax.all_to_all(wire, axis, b, b, tiled=True)
-    parts = codec.decode(recv, cfg, n // tp)
-    return jnp.sum(parts, axis=b).astype(x.dtype)
+    parts = codec.decode(recv, cfg, xc.shape[-1])
+    return jnp.sum(parts, axis=b)[..., :m].astype(x.dtype)
 
 
 def _qrs_fwd(x, axis, cfg):
@@ -528,18 +534,22 @@ def quantized_reduce_scatter_ef(x: jnp.ndarray, residual: jnp.ndarray,
     Same contract as :func:`compressed_psum_ef` for the scatter-shaped
     ZeRO++ gradient site: the residual lives at the *input* (full n)
     shape, the output is this rank's summed chunk. Alignment contract
-    matches :func:`quantized_reduce_scatter` (``n % tp == 0``,
-    ``(n/tp) % group == 0``).
+    matches :func:`quantized_reduce_scatter` (``n % tp == 0``; chunks
+    are group-padded internally).
     """
     if not cfg.enabled or cfg.scheme == "nccl":
         out = lax.psum_scatter(x, axis, scatter_dimension=x.ndim - 1,
                                tiled=True)
         return out, residual
+    tp = compat.axis_size(axis)
+    m = x.shape[-1] // tp
     xe = x.astype(jnp.float32) + residual.astype(jnp.float32)
     out = quantized_reduce_scatter(xe, axis, cfg)
-    # alignment contract makes the flat QDQ's groups identical to the
-    # (tp, n/tp)-chunked encode the RS ran — no padding needed
-    err = xe - codec.qdq_wire(xe, cfg)
+    # The RS has a single quantization stage, so this rank's entire
+    # error is its local QDQ error — taken on the same (tp, m)-chunked,
+    # group-padded view the RS encoded, pad error sliced off with it.
+    xc = _pad_to(xe.reshape(*xe.shape[:-1], tp, m), cfg.group)
+    err = (xc - codec.qdq_wire(xc, cfg))[..., :m].reshape(xe.shape)
     return out.astype(x.dtype), err.astype(residual.dtype)
 
 

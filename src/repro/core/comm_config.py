@@ -113,6 +113,12 @@ class CommConfig:
     bits: int = 8                 # any of 2..8
     group: int = 128              # quantization group size (paper: 128 or 32)
     spike: bool = False           # spike reserving (paper: for INT2/3)
+    # Randomized Hadamard rotation per group before quantize (inverted
+    # after dequant) — SDP4Bit's alternative to spike reserving: smears
+    # outliers across the group instead of carrying them exactly, so the
+    # wire drops the spike sections entirely. Mutually exclusive with
+    # ``spike``; needs a power-of-two ``group``.
+    rotation: bool = False
     scale_int: bool = False       # integer log2 scale/zero codec (theta=10)
     theta: int = 10               # scale_int linear upscaling factor
     scheme: str = "two_step"      # collective schedule
@@ -132,10 +138,25 @@ class CommConfig:
             if self.spike:
                 # 2 spikes per group are removed; need codes for the rest.
                 assert self.group >= 4
+            if self.rotation:
+                assert not self.spike, \
+                    "rotation replaces spike reserving (pick one)"
+                assert self.group & (self.group - 1) == 0, \
+                    f"rotation needs a power-of-two group, " \
+                    f"got {self.group}"
 
     def with_backend(self, backend: str) -> "CommConfig":
         """Same config routed through a different codec backend."""
         return dataclasses.replace(self, backend=backend)
+
+    def with_rotation(self, on: bool = True) -> "CommConfig":
+        """Same transport with the Hadamard-rotated quantizer toggled.
+
+        Turning rotation on drops spike reserving (the two are exclusive
+        outlier treatments — rotation makes the reserved sections
+        redundant and the wire shorter)."""
+        return dataclasses.replace(
+            self, rotation=on, spike=False if on else self.spike)
 
     def with_scheme(self, scheme: str) -> "CommConfig":
         """Same config routed through a different collective schedule."""
@@ -154,8 +175,10 @@ class CommConfig:
         if bits >= 5:
             return dataclasses.replace(self, bits=bits, group=128,
                                        spike=False)
+        # rotation carries over (both paper default groups are powers of
+        # two) and keeps spike off — the exclusive-outlier-treatment rule.
         return dataclasses.replace(self, bits=bits, group=32,
-                                   spike=bits <= 2)
+                                   spike=bits <= 2 and not self.rotation)
 
     # ----- wire-size accounting (exact; used by Table 4/5 benches too) ---
 

@@ -446,7 +446,9 @@ def save_policy_file(path: str, policy: CommPolicy) -> None:
 def _cfg_cols(cfg: Optional[CommConfig], n: int) -> Tuple[str, ...]:
     if cfg is None or not cfg.enabled:
         return ("-", "-", "-", "exact", "-", f"{2 * n}", "1.00x")
-    return (str(cfg.bits), str(cfg.group), "SR" if cfg.spike else "-",
+    # outlier column: SR = spike reserving, RH = randomized Hadamard
+    outlier = "SR" if cfg.spike else ("RH" if cfg.rotation else "-")
+    return (str(cfg.bits), str(cfg.group), outlier,
             cfg.scheme, cfg.backend, str(cfg.wire_bytes(n)),
             f"{cfg.compression_ratio(n):.2f}x")
 

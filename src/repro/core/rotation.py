@@ -1,0 +1,87 @@
+"""Randomized Hadamard rotation: the outlier-killing quantizer stage.
+
+SDP4Bit's alternative to the paper's spike reserving: instead of
+carrying the 2 largest values of every group exactly on the wire
+(extra sections, Fig. 5c), rotate each group with a randomized
+orthogonal transform *before* quantizing. A Hadamard rotation smears a
+single spike across the whole group (every rotated coordinate carries
+``|spike|/sqrt(group)`` of it), so the post-rotation distribution is
+outlier-free and the plain group-wise RTN quantizer covers it with a
+small scale — no reserved sections, no extra wire bytes.
+
+The transform is ``x -> (x * s) @ H_g / sqrt(g)`` per group, where
+``H_g`` is the Sylvester-Hadamard matrix (``g`` a power of two) and
+``s`` a fixed pseudo-random sign vector (the "randomized" part — it
+decorrelates coordinate-aligned structure; fixed per group size so both
+ends of the wire derive it without metadata).  The inverse is the exact
+transpose.
+
+Both constants are *derived inside the trace* from integer identities —
+``H[i, j] = (-1)^popcount(i & j)`` via a 2-D iota, and the signs from a
+stateless avalanche hash of the lane index — rather than closed-over
+host arrays: Pallas kernel bodies reject captured array constants, and
+this way the rotation runs unchanged in the jnp reference codec, the
+fused wire kernels and the RDMA/emulation paths (the same byte-identity
+wall as the rest of :mod:`repro.core.tilecodec`).  Both directions are
+cheap ``(g, g)`` f32 matmuls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: seed for the fixed sign vectors; baked into the wire format (both
+#: ends derive the same signs from the group size alone).
+_SIGN_SEED = 20250809
+
+
+def _check_group(group: int) -> None:
+    assert group >= 1 and (group & (group - 1)) == 0, \
+        f"rotation needs a power-of-two group, got {group}"
+
+
+def hadamard(group: int) -> jnp.ndarray:
+    """Orthonormal Sylvester-Hadamard matrix ``H / sqrt(group)`` (f32).
+
+    ``H[i, j] = (-1)^popcount(i & j)`` — built from a 2-D iota so it is
+    a traced value (Pallas-safe), identical on every backend.
+    """
+    _check_group(group)
+    i = jax.lax.broadcasted_iota(jnp.uint32, (group, group), 0)
+    j = jax.lax.broadcasted_iota(jnp.uint32, (group, group), 1)
+    par = jax.lax.population_count(i & j) & jnp.uint32(1)
+    h = jnp.where(par == 1, jnp.float32(-1), jnp.float32(1))
+    return h * np.float32(1.0 / np.sqrt(group))
+
+
+def signs(group: int) -> jnp.ndarray:
+    """Fixed pseudo-random ±1 diagonal for ``group``-sized rotations.
+
+    Stateless lowbias32-style avalanche hash of the lane index (seeded
+    per group size) — no RNG state, no host constants, same vector at
+    both ends of the wire.
+    """
+    _check_group(group)
+    seed = (_SIGN_SEED + group * 0x9E3779B9) & 0xFFFFFFFF
+    u = jnp.arange(group, dtype=jnp.uint32) + jnp.uint32(seed)
+    u = (u ^ (u >> 16)) * jnp.uint32(0x7FEB352D)
+    u = (u ^ (u >> 15)) * jnp.uint32(0x846CA68B)
+    u = u ^ (u >> 16)
+    return jnp.where((u & 1) == 1, jnp.float32(-1), jnp.float32(1))
+
+
+def rotate(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """(..., n) -> (..., n) f32, each ``group``-chunk Hadamard-rotated."""
+    shape = x.shape
+    xg = x.astype(jnp.float32).reshape(*shape[:-1], -1, group)
+    out = (xg * signs(group)) @ hadamard(group)
+    return out.reshape(shape)
+
+
+def unrotate(y: jnp.ndarray, group: int) -> jnp.ndarray:
+    """Exact inverse of :func:`rotate` (orthogonal transpose)."""
+    shape = y.shape
+    yg = y.astype(jnp.float32).reshape(*shape[:-1], -1, group)
+    out = (yg @ hadamard(group).T) * signs(group)
+    return out.reshape(shape)

@@ -31,6 +31,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import rotation as rot
 from repro.core import scale_codec, wordpack
 from repro.core.comm_config import WireLayout, _wire_layout
 from repro.core.quant import dequantize, quantize
@@ -51,8 +52,8 @@ def tile_kwargs(cfg, n: int) -> dict:
     it up, instead of five hand-maintained dict literals drifting apart.
     """
     return dict(bits=cfg.bits, group=cfg.group, n=n, spike=cfg.spike,
-                scale_int=cfg.scale_int, theta=cfg.theta,
-                meta_dtype=jnp.dtype(cfg.meta_dtype))
+                rotation=cfg.rotation, scale_int=cfg.scale_int,
+                theta=cfg.theta, meta_dtype=jnp.dtype(cfg.meta_dtype))
 
 
 def _meta_to_bytes(m: jnp.ndarray) -> jnp.ndarray:
@@ -72,11 +73,15 @@ def _bytes_to_meta(b: jnp.ndarray, dtype, k: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def encode_sections(x: jnp.ndarray, *, bits: int, group: int, n: int,
-                    spike: bool, scale_int: bool, theta: int, meta_dtype):
+                    spike: bool, scale_int: bool, theta: int, meta_dtype,
+                    rotation: bool = False):
     """(R, n) float tile -> [(Section, uint8 bytes), ...] in wire order.
 
     The single place the wire format is produced; both ``encode_tile``
-    variants just place these sections.
+    variants just place these sections. With ``rotation`` each group is
+    Hadamard-rotated (f32) before quantization — the wire then carries
+    rotated coordinates under the identical section layout (spike
+    sections are absent by construction: rotation replaces reserving).
     """
     assert x.shape[-1] == n, (x.shape, n)
     rows = x.shape[0]
@@ -84,6 +89,9 @@ def encode_sections(x: jnp.ndarray, *, bits: int, group: int, n: int,
     layout = tile_layout(n, bits=bits, group=group, spike=spike,
                          scale_int=scale_int)
 
+    if rotation:
+        assert not spike
+        x = rot.rotate(x, group)
     if spike:
         q = spike_quantize(x, bits, group, meta_dtype)
         codes, scale_w, zero_w = q.codes, q.scale, q.zero
@@ -129,14 +137,15 @@ def encode_tile_into(x: jnp.ndarray, wire_ref, **kw) -> None:
 
 def encode_tile(x: jnp.ndarray, *, bits: int, group: int, n: int,
                 spike: bool, scale_int: bool, theta: int,
-                meta_dtype) -> jnp.ndarray:
+                meta_dtype, rotation: bool = False) -> jnp.ndarray:
     """(R, n) float tile -> (R, wire_bytes(n)) uint8 wire tile (pure)."""
     layout = tile_layout(n, bits=bits, group=group, spike=spike,
                          scale_int=scale_int)
     buf = jnp.zeros((x.shape[0], layout.total), jnp.uint8)
     for span, sec in encode_sections(
             x, bits=bits, group=group, n=n, spike=spike,
-            scale_int=scale_int, theta=theta, meta_dtype=meta_dtype):
+            scale_int=scale_int, theta=theta, meta_dtype=meta_dtype,
+            rotation=rotation):
         buf = buf.at[:, span.offset:span.end].set(sec)
     return buf
 
@@ -147,7 +156,7 @@ def encode_tile(x: jnp.ndarray, *, bits: int, group: int, n: int,
 
 def decode_tile(wire: jnp.ndarray, *, bits: int, group: int, n: int,
                 spike: bool, scale_int: bool, theta: int, meta_dtype,
-                out_dtype) -> jnp.ndarray:
+                out_dtype, rotation: bool = False) -> jnp.ndarray:
     """(R, wire_bytes(n)) uint8 wire tile -> (R, n) out_dtype tile."""
     rows = wire.shape[0]
     g = n // group
@@ -184,4 +193,7 @@ def decode_tile(wire: jnp.ndarray, *, bits: int, group: int, n: int,
         q = SpikeQuant(codes, scale, zero,
                        sv.reshape(rows, g, 2), si.reshape(rows, g, 2))
         return spike_dequantize(q, out_dtype)
+    if rotation:
+        deq = dequantize(codes, scale, zero, jnp.float32)
+        return rot.unrotate(deq, group).astype(out_dtype)
     return dequantize(codes, scale, zero, out_dtype)

@@ -130,9 +130,9 @@ def fused_encode_wire(x: jnp.ndarray, cfg, use_pallas: bool | None = None):
     block = _pick_block(x.shape[0], x.shape[1], on_tpu)
     xp, rows = _pad_rows(x, block)
     buf = encode_wire(xp, bits=cfg.bits, group=cfg.group, spike=cfg.spike,
-                      scale_int=cfg.scale_int, theta=cfg.theta,
-                      meta_dtype=cfg.meta_dtype, block_rows=block,
-                      interpret=not on_tpu)
+                      rotation=cfg.rotation, scale_int=cfg.scale_int,
+                      theta=cfg.theta, meta_dtype=cfg.meta_dtype,
+                      block_rows=block, interpret=not on_tpu)
     return buf[:rows]
 
 
@@ -149,10 +149,10 @@ def fused_decode_wire(buf: jnp.ndarray, cfg, n: int,
     block = _pick_block(buf.shape[0], n, on_tpu)
     bp, rows = _pad_rows(buf, block)
     out = decode_wire(bp, bits=cfg.bits, group=cfg.group, n=n,
-                      spike=cfg.spike, scale_int=cfg.scale_int,
-                      theta=cfg.theta, meta_dtype=cfg.meta_dtype,
-                      out_dtype=out_dtype, block_rows=block,
-                      interpret=not on_tpu)
+                      spike=cfg.spike, rotation=cfg.rotation,
+                      scale_int=cfg.scale_int, theta=cfg.theta,
+                      meta_dtype=cfg.meta_dtype, out_dtype=out_dtype,
+                      block_rows=block, interpret=not on_tpu)
     return out[:rows]
 
 

@@ -52,12 +52,13 @@ def _encode_kernel(x_ref, wire_ref, *, kw):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "group", "spike", "scale_int",
-                                    "theta", "meta_dtype", "block_rows",
-                                    "interpret"))
+                   static_argnames=("bits", "group", "spike", "rotation",
+                                    "scale_int", "theta", "meta_dtype",
+                                    "block_rows", "interpret"))
 def encode_wire(x: jnp.ndarray, *, bits: int, group: int, spike: bool,
                 scale_int: bool, theta: int = 10,
-                meta_dtype: str = "bfloat16", block_rows: int | None = None,
+                meta_dtype: str = "bfloat16", rotation: bool = False,
+                block_rows: int | None = None,
                 interpret: bool = True):
     """(R, n) float -> (R, wire_bytes(n)) uint8 complete wire buffer.
 
@@ -68,7 +69,8 @@ def encode_wire(x: jnp.ndarray, *, bits: int, group: int, spike: bool,
     block = block_rows or rows
     assert rows % block == 0 and n % group == 0
     cfg = CommConfig(bits=bits, group=group, spike=spike,
-                     scale_int=scale_int, theta=theta, meta_dtype=meta_dtype)
+                     rotation=rotation, scale_int=scale_int, theta=theta,
+                     meta_dtype=meta_dtype)
     wb = cfg.wire_bytes(n)
     kw = _cfg_kw(cfg, n)
     grid = (rows // block,)
@@ -92,18 +94,21 @@ def _decode_kernel(wire_ref, out_ref, *, kw, out_dtype):
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "group", "n", "spike",
-                                    "scale_int", "theta", "meta_dtype",
-                                    "out_dtype", "block_rows", "interpret"))
+                                    "rotation", "scale_int", "theta",
+                                    "meta_dtype", "out_dtype", "block_rows",
+                                    "interpret"))
 def decode_wire(buf: jnp.ndarray, *, bits: int, group: int, n: int,
                 spike: bool, scale_int: bool, theta: int = 10,
-                meta_dtype: str = "bfloat16", out_dtype=jnp.float32,
+                meta_dtype: str = "bfloat16", rotation: bool = False,
+                out_dtype=jnp.float32,
                 block_rows: int | None = None, interpret: bool = True):
     """(R, wire_bytes(n)) uint8 -> (R, n) out_dtype. Inverse of encode."""
     rows = buf.shape[0]
     block = block_rows or rows
     assert rows % block == 0
     cfg = CommConfig(bits=bits, group=group, spike=spike,
-                     scale_int=scale_int, theta=theta, meta_dtype=meta_dtype)
+                     rotation=rotation, scale_int=scale_int, theta=theta,
+                     meta_dtype=meta_dtype)
     wb = cfg.wire_bytes(n)
     assert buf.shape == (rows, wb), (buf.shape, (rows, wb))
     kw = _cfg_kw(cfg, n)

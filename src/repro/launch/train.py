@@ -33,7 +33,7 @@ from repro.train import checkpoint as ckpt_lib
 from repro.train.data import DataConfig, make_dataset, to_device
 from repro.train.optim import OptimConfig
 from repro.train.train_step import (init_train_state, make_train_step,
-                                    wants_grad_ef)
+                                    wants_grad_ef, wants_qgrad_ef)
 
 POLICIES = {"paper": paper_policy, "bf16": lambda: BF16_POLICY,
             "aggressive": aggressive_policy, "depth": depth_policy}
@@ -121,6 +121,7 @@ def main(argv=None):
         context=f"{args.arch}/{pol_name}")
 
     grad_ef = wants_grad_ef(policy, mesh)
+    qgrad_ef = wants_qgrad_ef(policy, plan)
     if args.resume:
         store, opt, start = ckpt_lib.restore(args.resume, mesh)
         if grad_ef and "ef" not in opt:
@@ -132,11 +133,19 @@ def main(argv=None):
             # no "ef" leaf, so a stale residual would be a pytree
             # mismatch
             opt.pop("ef", None)
+        if qgrad_ef and "qef" not in opt:
+            opt["qef"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(
+                    (p.shape[0], p.shape[1], p.shape[2] * plan.fsdp),
+                    jnp.float32), store)
+        elif not qgrad_ef:
+            opt.pop("qef", None)
         print(f"[train] resumed from {args.resume} @ step {start}")
     else:
         store = build_store(param_groups(cfg, plan), plan,
                             jax.random.PRNGKey(0), jnp.float32, mesh)
-        opt = init_train_state(store, opt_cfg, grad_ef=grad_ef)
+        opt = init_train_state(store, opt_cfg, grad_ef=grad_ef,
+                               qgrad_ef=qgrad_ef, fsdp=plan.fsdp)
         start = 0
 
     step_fn = make_train_step(cfg, plan, policy, opt_cfg, mesh,

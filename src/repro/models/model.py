@@ -248,25 +248,37 @@ def policy_segments(cfg: ModelConfig, policy: CommPolicy):
     return segs
 
 
-def _encode(views, cfg, plan, policy, enc_embeds, qag, qgrad=None):
+def _take0(tree):
+    """Unstack dim0 of every leaf of a name->array dict (or pass None)."""
+    return None if tree is None else {k: v[0] for k, v in tree.items()}
+
+
+def _encode(views, cfg, plan, policy, enc_embeds, qag, deltas=None):
     """Whisper-style encoder over stub frame embeddings (B, n_ctx, d)."""
+    has_deltas = deltas is not None
     gx = views["encoder_extra"]
     specs_x = param_groups(cfg, plan)["encoder_extra"][1]
     px = gather_group({k: v[0] for k, v in gx.items()}, specs_x, plan,
-                      enc_embeds.dtype, qag, qgrad)
+                      enc_embeds.dtype, qag,
+                      _take0(deltas["encoder_extra"] if has_deltas
+                             else None))
     x = enc_embeds + px["enc_pos"][None, :enc_embeds.shape[1]]
     specs = param_groups(cfg, plan)["encoder"][1]
     pos = jnp.arange(enc_embeds.shape[1])
 
-    def body(carry, layer_views):
+    def body(carry, xs):
+        layer_views, layer_deltas = xs
         p = gather_group(layer_views, specs, plan, enc_embeds.dtype, qag,
-                         qgrad)
+                         layer_deltas if has_deltas else None)
         y, _, _ = apply_block("enc", p, carry, positions=pos, enc_out=None,
                               cfg=cfg, plan=plan, policy=policy,
                               window_override=None, cache=None)
         return y, None
 
-    x, _ = lax.scan(jax.checkpoint(body), x, views["encoder"],
+    xs = (views["encoder"],
+          deltas["encoder"] if has_deltas
+          else jnp.zeros((cfg.encoder.n_layers,)))
+    x, _ = lax.scan(jax.checkpoint(body), x, xs,
                     unroll=cfg.encoder.n_layers if UNROLL_LAYER_SCAN
                     else 1)
     return _norm(px, x, cfg, "ef_")
@@ -277,21 +289,31 @@ def forward(views: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
             enc_embeds: Optional[jnp.ndarray] = None,
             window_override: Optional[int] = None,
             caches: Optional[Dict] = None,
+            grad_deltas: Optional[Dict] = None,
             dtype=jnp.bfloat16):
     """tokens (B_loc, S) -> (hidden (B_loc,S,d), aux, new_caches).
 
     caches=None -> full-sequence (train/prefill). caches given -> S must
     be 1 (single-token decode step).
+
+    ``grad_deltas`` (train-only) mirrors ``views``' nesting with zero
+    full-flat-length leaves; when given, every gathered parameter is
+    stop-gradiented and its delta added, so differentiating w.r.t. the
+    deltas yields full-length per-rank gradients for the explicit
+    post-backward quantized+EF reduce-scatter (see
+    ``parallel/shardings.py``). The quantized gradient RS therefore no
+    longer lives inside the gather's VJP.
     """
     groups = param_groups(cfg, plan)
     policy = policy.bind(cfg.n_layers)   # depth-addressed schedules
     qag = policy.resolve("qag")
-    qgrad = policy.resolve("qgrad_rs")
     decode = caches is not None
+    has_deltas = grad_deltas is not None
 
     emb_specs = groups["embed"][1]
     pe = gather_group({k: v[0] for k, v in views["embed"].items()},
-                      emb_specs, plan, dtype, qag, qgrad)
+                      emb_specs, plan, dtype, qag,
+                      _take0(grad_deltas["embed"] if has_deltas else None))
     x = embed_lookup(tokens, pe["tok"], policy, dtype)
 
     if decode:
@@ -312,7 +334,7 @@ def forward(views: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
     if cfg.is_enc_dec:
         assert enc_embeds is not None
         enc_out = _encode(views, cfg, plan, policy,
-                          enc_embeds.astype(dtype), qag, qgrad)
+                          enc_embeds.astype(dtype), qag, grad_deltas)
     elif cfg.has_cross:
         assert enc_embeds is not None
         enc_out = enc_embeds.astype(dtype)
@@ -323,7 +345,9 @@ def forward(views: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
     def run_one(kind, gname, layer, carry_x, cache):
         specs = groups[gname][1]
         p = gather_group({k: v[0] for k, v in views[gname].items()},
-                         specs, plan, dtype, qag, qgrad)
+                         specs, plan, dtype, qag,
+                         _take0(grad_deltas[gname] if has_deltas
+                                else None))
         return apply_block(kind, p, carry_x, positions=positions,
                            enc_out=enc_out, cfg=cfg, plan=plan,
                            policy=policy, window_override=window_override,
@@ -349,9 +373,9 @@ def forward(views: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
             # config for every repeat the scan covers.
             def body(carry, xs):
                 cx, caux = carry
-                layer_views, layer_cache = xs
+                layer_views, layer_deltas, layer_cache = xs
                 p = gather_group(layer_views, specs, plan, dtype, qag,
-                                 qgrad)
+                                 layer_deltas if has_deltas else None)
                 ncs = {}
                 for j, kind in enumerate(cfg.pattern):
                     pj = {n[len(f"L{j}_"):]: v for n, v in p.items()
@@ -368,6 +392,8 @@ def forward(views: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
             return body
 
         xs = (views["pattern"],
+              grad_deltas["pattern"] if has_deltas else
+              jnp.zeros((cfg.pattern_repeats,)),
               caches["pattern"] if decode else
               jnp.zeros((cfg.pattern_repeats,)))
         seg_caches = []
@@ -396,7 +422,8 @@ def forward(views: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
 
     out_specs = groups["out"][1]
     po = gather_group({k: v[0] for k, v in views["out"].items()},
-                      out_specs, plan, dtype, qag, qgrad)
+                      out_specs, plan, dtype, qag,
+                      _take0(grad_deltas["out"] if has_deltas else None))
     x = _norm(po, x, cfg, "nf_")
     unemb = po["unemb"] if not cfg.tie_embeddings else pe["tok"]
     return x, unemb, aux_total, (new_caches if decode else None)

@@ -11,9 +11,20 @@ One PartitionSpec covers the whole tree: ``P(None, "model", "data")``.
 Inside ``shard_map`` the per-rank view is ``(n_stack, 1, flat/fsdp)``;
 ``gather_flat`` all-gathers dim2 (optionally through the paper's wire
 codec — ZeRO++-style quantized weight gather, a beyond-paper extension)
-and reshapes to the logical local shape. Its transpose is a
+and reshapes to the logical local shape. Its transpose is the *exact*
 reduce-scatter, which lands gradients exactly where the ZeRO optimizer
 shards live.
+
+The quantized gradient RS deliberately does NOT live in that transpose:
+a ``custom_vjp`` cannot thread the error-feedback residual state, so a
+qgrad inside the backward pass is forever biased (and its early version
+silently fell back to the exact psum_scatter on alignment mismatches).
+Instead ``gather_param`` accepts a zero-valued full-length ``delta``
+added to the (stop-gradiented) gathered weights; differentiating w.r.t.
+the deltas hands the train step per-rank *full* gradients, and the
+quantized+EF reduce-scatter runs as an explicit post-``value_and_grad``
+pass (``train_step.py`` -> ``collectives.quantized_reduce_scatter_ef``)
+with its residual pytree in optimizer state.
 """
 from __future__ import annotations
 
@@ -27,7 +38,6 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
 from repro.core import codec
 from repro.core.comm_config import CommConfig
 from repro.parallel.plan import ShardingPlan, flat_store_len
@@ -120,16 +130,14 @@ def init_store_rank(specs: Dict[str, ParamSpec], key, rank: int,
 # FSDP gather (differentiable, optionally quantized)
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def fsdp_all_gather(x: jnp.ndarray, axis: str, cfg: Optional[CommConfig],
-                    bwd_cfg: Optional[CommConfig] = None):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fsdp_all_gather(x: jnp.ndarray, axis: str, cfg: Optional[CommConfig]):
     """(flat/fsdp,) -> (flat,) over the data axis.
 
     cfg=None/disabled -> plain all_gather. Enabled -> the paper's wire
     codec compresses the gathered weights (ZeRO++-style qAG). Transpose
-    is a reduce-scatter (lands grads ZeRO-sharded); ``bwd_cfg`` optionally
-    compresses that gradient RS too (ZeRO++'s third technique, realized
-    with the paper's wire codec).
+    is the *exact* reduce-scatter (lands grads ZeRO-sharded); gradient
+    compression happens outside the VJP — see the module docstring.
     """
     if cfg is None or not cfg.enabled:
         return lax.all_gather(x, axis, axis=0, tiled=True)
@@ -139,18 +147,12 @@ def fsdp_all_gather(x: jnp.ndarray, axis: str, cfg: Optional[CommConfig],
                         out_dtype=x.dtype).reshape(-1)
 
 
-def _ag_fwd(x, axis, cfg, bwd_cfg):
-    return fsdp_all_gather(x, axis, cfg, bwd_cfg), None
+def _ag_fwd(x, axis, cfg):
+    return fsdp_all_gather(x, axis, cfg), None
 
 
-def _ag_bwd(axis, cfg, bwd_cfg, res, g):
+def _ag_bwd(axis, cfg, res, g):
     del res
-    if bwd_cfg is not None and bwd_cfg.enabled:
-        from repro.core.collectives import quantized_reduce_scatter
-        n = g.shape[-1]
-        if n % (compat.axis_size(axis) * bwd_cfg.group) == 0:
-            return (quantized_reduce_scatter(
-                g.astype(jnp.float32), axis, bwd_cfg).astype(g.dtype),)
     return (lax.psum_scatter(g, axis, scatter_dimension=0, tiled=True),)
 
 
@@ -160,12 +162,22 @@ fsdp_all_gather.defvjp(_ag_fwd, _ag_bwd)
 def gather_param(flat_view: jnp.ndarray, spec: ParamSpec,
                  plan: ShardingPlan, dtype,
                  qag: Optional[CommConfig] = None,
-                 qgrad: Optional[CommConfig] = None) -> jnp.ndarray:
-    """Per-rank storage view (1, flat/fsdp) -> logical local array."""
+                 delta: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Per-rank storage view (1, flat/fsdp) -> logical local array.
+
+    ``delta`` (a zero full-length ``(1, flat)`` per-rank array) is the
+    gradient tap for the out-of-VJP qgrad path: when given, the gathered
+    weights are stop-gradiented and ``delta`` added, so the grad w.r.t.
+    the deltas is the *full-length* per-rank parameter gradient — before
+    any reduce-scatter — which the train step then syncs explicitly
+    through the quantized+EF RS.
+    """
     if plan.fsdp == 1:           # serving mode: weights resident
         flat = flat_view.reshape(-1)
     else:
-        flat = fsdp_all_gather(flat_view.reshape(-1), "data", qag, qgrad)
+        flat = fsdp_all_gather(flat_view.reshape(-1), "data", qag)
+    if delta is not None:
+        flat = lax.stop_gradient(flat) + delta.reshape(-1).astype(flat.dtype)
     shape = spec.local_shape(plan)
     n = math.prod(shape)
     return flat[:n].reshape(shape).astype(dtype)
@@ -174,10 +186,11 @@ def gather_param(flat_view: jnp.ndarray, spec: ParamSpec,
 def gather_group(views: Dict[str, jnp.ndarray],
                  specs: Dict[str, ParamSpec], plan: ShardingPlan, dtype,
                  qag: Optional[CommConfig] = None,
-                 qgrad: Optional[CommConfig] = None
+                 deltas: Optional[Dict[str, jnp.ndarray]] = None
                  ) -> Dict[str, jnp.ndarray]:
     return {name: gather_param(views[name], specs[name], plan, dtype,
-                               qag, qgrad)
+                               qag,
+                               None if deltas is None else deltas[name])
             for name in specs}
 
 

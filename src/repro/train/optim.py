@@ -40,7 +40,8 @@ def lr_schedule(cfg: OptimConfig, step: jnp.ndarray) -> jnp.ndarray:
 
 
 def init_opt_state(params: Any, cfg: OptimConfig,
-                   grad_ef: bool = False) -> Dict[str, Any]:
+                   grad_ef: bool = False, qgrad_ef: bool = False,
+                   fsdp: int = 1) -> Dict[str, Any]:
     dt = jnp.dtype(cfg.moment_dtype)
     zeros = lambda p: jnp.zeros(p.shape, dt)
     state = {"m": jax.tree_util.tree_map(zeros, params),
@@ -52,6 +53,15 @@ def init_opt_state(params: Any, cfg: OptimConfig,
         # grads it corrects), donated and checkpointed alongside m/v
         ef = lambda p: jnp.zeros(p.shape, jnp.float32)
         state["ef"] = jax.tree_util.tree_map(ef, params)
+    if qgrad_ef:
+        # error-feedback residual for the quantized gradient RS over
+        # ``data``: the residual lives at the RS *input* shape — the
+        # full flat length, i.e. fsdp x the stored shard — with dim2
+        # sharded over ``data`` so the per-rank view matches the
+        # full-length delta gradients (see train_step.py)
+        qef = lambda p: jnp.zeros(
+            (p.shape[0], p.shape[1], p.shape[2] * fsdp), jnp.float32)
+        state["qef"] = jax.tree_util.tree_map(qef, params)
     return state
 
 

@@ -2,13 +2,23 @@
 
 Gradient communication map (all sites use the paper's machinery):
 
-  within pod   FSDP gather transpose -> reduce-scatter over ``data``
-               (sums DP grads and lands them ZeRO-sharded; this plays the
-               "partial ReduceScatter inside the fast domain" role of the
-               paper's hierarchical scheme)
+  within pod   reduce-scatter over ``data`` (sums DP grads and lands
+               them ZeRO-sharded; this plays the "partial ReduceScatter
+               inside the fast domain" role of the paper's hierarchical
+               scheme). Exact by default — the FSDP gather's VJP. With
+               a ``qgrad_rs`` policy the RS instead runs *explicitly*
+               after ``value_and_grad`` through
+               ``collectives.quantized_reduce_scatter[_ef]``: the
+               backward taps full-length per-rank gradients via zero
+               "delta" inputs added to the gathered weights
+               (``shardings.gather_param``), so the compressed sync can
+               thread an error-feedback residual pytree (optimizer
+               state ``"qef"``) — something a ``custom_vjp`` can never
+               do — and 4/2-bit qgrad converges instead of drifting.
   across pods  quantized two-step AllReduce over ``pod`` on the sharded
                flat grads (only 1/fsdp of the volume crosses the slow
-               bridge — the Table 5 saving, realized structurally)
+               bridge — the Table 5 saving, realized structurally),
+               with its own EF residual (``"ef"``) when ``grad_ef``.
   model axis   replicated-stored params (norms, biases, routers,
                replicated kv projections) get an exact psum to keep the
                TP copies in sync (Megatron's LN-grad all-reduce)
@@ -24,7 +34,9 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.collectives import compressed_psum, compressed_psum_ef
+from repro.core.collectives import (compressed_psum, compressed_psum_ef,
+                                    quantized_reduce_scatter,
+                                    quantized_reduce_scatter_ef)
 from repro.core.comm_config import CommConfig, NO_COMPRESSION
 from repro.core.policy import CommPolicy
 from repro.models.config import ModelConfig
@@ -63,20 +75,20 @@ def make_loss_fn(cfg: ModelConfig, plan: ShardingPlan, policy: CommPolicy,
     """Per-rank (store_views, batch) -> (seed_loss, raw_loss)."""
     dtype = jnp.dtype(cfg.dtype)
 
-    def one_micro(views, tokens, labels, enc_embeds):
+    def one_micro(views, deltas, tokens, labels, enc_embeds):
         hidden, unemb, aux, _ = forward(
             views, tokens, cfg, plan, policy,
-            enc_embeds=enc_embeds, dtype=dtype)
+            enc_embeds=enc_embeds, grad_deltas=deltas, dtype=dtype)
         return lm_loss(hidden, unemb, labels, cfg, plan, aux, aux_weight)
 
-    def loss_fn(views, batch):
+    def loss_fn(views, deltas, batch):
         denom = compat.axis_size("model") * compat.axis_size("data")
         if multi_pod:
             denom *= compat.axis_size("pod")
         tokens, labels = batch["tokens"], batch["labels"]
         enc = batch.get("enc_embeds")
         if n_micro == 1:
-            raw = one_micro(views, tokens, labels, enc)
+            raw = one_micro(views, deltas, tokens, labels, enc)
         else:
             b = tokens.shape[0]
             assert b % n_micro == 0, (b, n_micro)
@@ -85,7 +97,8 @@ def make_loss_fn(cfg: ModelConfig, plan: ShardingPlan, policy: CommPolicy,
             for i in range(n_micro):
                 sl = lambda a: lax.dynamic_slice_in_dim(a, i * mb, mb, 0) \
                     if a is not None else None
-                raw += one_micro(views, sl(tokens), sl(labels), sl(enc))
+                raw += one_micro(views, deltas, sl(tokens), sl(labels),
+                                 sl(enc))
             raw = raw / n_micro
         return raw / denom, raw
 
@@ -109,12 +122,42 @@ def pod_grad_config(policy: CommPolicy) -> CommConfig:
     return policy.resolve("grad") or NO_COMPRESSION
 
 
+def _grad_ef_eligible(policy: CommPolicy, multi_pod: bool) -> bool:
+    """THE pod-EF predicate: ``init_train_state`` (via ``wants_grad_ef``)
+    and ``make_train_step_fn``'s ``use_ef=None`` fallback both call this,
+    so the opt-state tree and the step function can never disagree on
+    whether the ``"ef"`` residual pytree exists."""
+    return bool(policy.grad_ef and multi_pod
+                and pod_grad_config(policy).enabled)
+
+
 def wants_grad_ef(policy: CommPolicy, mesh) -> bool:
     """Whether this (policy, mesh) pair carries an EF residual: the
     grad site must be enabled+compressed on a multi-pod mesh (the only
     place the quantized grad AR runs) and the policy must ask for it."""
-    return bool(policy.grad_ef and "pod" in mesh.axis_names
-                and pod_grad_config(policy).enabled)
+    return _grad_ef_eligible(policy, "pod" in mesh.axis_names)
+
+
+def qgrad_rs_config(policy: CommPolicy) -> CommConfig:
+    """The qgrad_rs-site config for the sharded-DP gradient RS."""
+    return policy.resolve("qgrad_rs") or NO_COMPRESSION
+
+
+def _qgrad_active(policy: CommPolicy, plan: ShardingPlan) -> bool:
+    """Whether the explicit quantized gradient RS replaces the exact
+    VJP reduce-scatter. Mesh-independent (derived from the plan at
+    construction), so the step function, opt state and shard_map specs
+    always agree."""
+    cfg = qgrad_rs_config(policy)
+    return bool(cfg.enabled and cfg.scheme != "nccl" and plan.fsdp > 1)
+
+
+def wants_qgrad_ef(policy: CommPolicy, plan: ShardingPlan) -> bool:
+    """Whether the qgrad RS carries its EF residual pytree (``"qef"``):
+    the site must be active and the policy must ask for EF. Pass this
+    to ``init_train_state`` — same single-predicate discipline as
+    ``wants_grad_ef``."""
+    return _qgrad_active(policy, plan) and bool(policy.grad_ef)
 
 
 def make_train_step_fn(cfg: ModelConfig, plan: ShardingPlan,
@@ -130,18 +173,55 @@ def make_train_step_fn(cfg: ModelConfig, plan: ShardingPlan,
     rep_mask = None  # built lazily (needs specs only)
     loss_fn = make_loss_fn(cfg, plan, policy, multi_pod, n_micro)
     pod_cfg = pod_grad_config(policy)
+    # resolved unconditionally so the recording-policy trace lane sees
+    # the qgrad_rs site even when it ends up inactive on this plan
+    qgrad_cfg = qgrad_rs_config(policy)
+    use_qgrad = _qgrad_active(policy, plan)
+    use_qgrad_ef = use_qgrad and bool(policy.grad_ef)
     if use_ef is None:
-        use_ef = bool(policy.grad_ef and multi_pod and pod_cfg.enabled)
+        use_ef = _grad_ef_eligible(policy, multi_pod)
 
     def step(store, opt_state, batch):
-        (seed_loss, raw), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(store, batch)
+        if use_qgrad:
+            # Zero full-flat-length deltas added to the gathered
+            # (stop-gradiented) weights: grads w.r.t. them are the
+            # full per-rank gradients, BEFORE any reduce-scatter —
+            # the explicit quantized+EF RS below replaces the VJP's.
+            deltas = jax.tree_util.tree_map(
+                lambda v: jnp.zeros(
+                    (v.shape[0], v.shape[1], v.shape[2] * plan.fsdp),
+                    v.dtype), store)
+            (seed_loss, raw), grads = jax.value_and_grad(
+                loss_fn, argnums=1, has_aux=True)(store, deltas, batch)
+        else:
+            (seed_loss, raw), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(store, None, batch)
 
         # --- model-axis sync for TP-replicated copies (exact psum) ---
         mask = _replicated_mask(cfg, plan)
         grads = {g: {n: (lax.psum(gr, "model") if mask[g][n] else gr)
                      for n, gr in gg.items()}
                  for g, gg in grads.items()}
+
+        # --- within-pod sync: quantized (optionally EF) RS over
+        #     ``data`` on the full-length delta grads, landing them
+        #     ZeRO-sharded exactly where the VJP's exact psum_scatter
+        #     would have (out-of-VJP so the residual can thread). ---
+        new_qef = None
+        if use_qgrad:
+            flat_g, tdef = jax.tree_util.tree_flatten(grads)
+            flat_g = [gr.astype(jnp.float32) for gr in flat_g]
+            if use_qgrad_ef:
+                flat_e = tdef.flatten_up_to(opt_state["qef"])
+                outs = [quantized_reduce_scatter_ef(gr, e, "data",
+                                                    qgrad_cfg)
+                        for gr, e in zip(flat_g, flat_e)]
+                grads = tdef.unflatten([o[0] for o in outs])
+                new_qef = tdef.unflatten([o[1] for o in outs])
+            else:
+                grads = tdef.unflatten(
+                    [quantized_reduce_scatter(gr, "data", qgrad_cfg)
+                     for gr in flat_g])
 
         # --- cross-pod sync: the paper's quantized two-step AR on the
         #     already-RS'd flat shards (hierarchical scheme, realized).
@@ -172,6 +252,8 @@ def make_train_step_fn(cfg: ModelConfig, plan: ShardingPlan,
                                               opt_cfg, gnorm)
         if new_ef is not None:
             new_opt["ef"] = new_ef
+        if new_qef is not None:
+            new_opt["qef"] = new_qef
         loss_rep = lax.pmean(raw, "data")
         if multi_pod:
             loss_rep = lax.pmean(loss_rep, "pod")
@@ -199,6 +281,10 @@ def make_train_step(cfg: ModelConfig, plan: ShardingPlan,
     opt_spec = {"m": STORE_SPEC, "v": STORE_SPEC, "step": P()}
     if use_ef:
         opt_spec["ef"] = STORE_SPEC    # EF residual, sharded like grads
+    if wants_qgrad_ef(policy, plan):
+        # qgrad EF residual: full-flat-length leaves, dim2 over ``data``
+        # (per-rank view matches the full-length delta grads)
+        opt_spec["qef"] = STORE_SPEC
 
     sm = compat.shard_map(
         step, mesh=mesh,
@@ -208,7 +294,11 @@ def make_train_step(cfg: ModelConfig, plan: ShardingPlan,
     return jax.jit(sm, donate_argnums=(0, 1))
 
 
-def init_train_state(store, opt_cfg: OptimConfig, grad_ef: bool = False):
-    """Optimizer state; ``grad_ef`` adds the zero EF residual pytree
-    (pass ``wants_grad_ef(policy, mesh)`` so state and step agree)."""
-    return init_opt_state(store, opt_cfg, grad_ef=grad_ef)
+def init_train_state(store, opt_cfg: OptimConfig, grad_ef: bool = False,
+                     qgrad_ef: bool = False, fsdp: int = 1):
+    """Optimizer state; ``grad_ef`` adds the zero pod-EF residual pytree
+    (pass ``wants_grad_ef(policy, mesh)``), ``qgrad_ef`` the zero qgrad
+    residual pytree (pass ``wants_qgrad_ef(policy, plan)`` and
+    ``plan.fsdp``) so state and step always agree."""
+    return init_opt_state(store, opt_cfg, grad_ef=grad_ef,
+                          qgrad_ef=qgrad_ef, fsdp=fsdp)

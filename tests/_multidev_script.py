@@ -405,6 +405,87 @@ def check_grad_ef_train():
           {"dist_plain": round(d_plain, 4), "dist_ef": round(d_ef, 4)})
 
 
+def check_qgrad_ef_train():
+    """2-bit quantized gradient reduce-scatter on the ZeRO/FSDP axis
+    (the fsdp_all_gather transpose, now an explicit post-VJP pass):
+    with error feedback the toy run (a) reaches a LOWER loss after 50
+    steps than the same qgrad_rs policy without EF, and (b) tracks the
+    exact-gradient parameter trajectory markedly better — the de-bias
+    claim for the sharded-gradient path. The fsdp=4 axis gives each
+    rank a quarter-shard, so the per-rank QDQ residual pytree
+    (opt_state["qef"]) is genuinely exercised.
+    """
+    from repro.configs import get_smoke_config
+    from repro.core.comm_config import CommConfig
+    from repro.core.policy import CommPolicy
+    from repro.models.model import param_groups
+    from repro.parallel.plan import make_plan
+    from repro.parallel.shardings import build_store
+    from repro.train.data import DataConfig, make_dataset, to_device
+    from repro.train.optim import OptimConfig
+    from repro.train.train_step import (init_train_state, make_train_step,
+                                        wants_grad_ef, wants_qgrad_ef)
+
+    mesh = make_test_mesh(data=4, model=2)
+    cfg = get_smoke_config("qwen3-14b")
+    plan = make_plan(cfg, tp=2, fsdp=4)
+    steps = 50
+    opt_cfg = OptimConfig(lr=3e-3, warmup_steps=2, total_steps=steps)
+    ds = make_dataset(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                 global_batch=8))
+    # Coarsest 2-bit wire (group 128, no spike): the regime where the
+    # biased qgrad path visibly hurts a 50-step toy run, so the EF
+    # margin clears trajectory noise (same reasoning as grad_ef_train).
+    q2 = CommConfig(bits=2, group=128, spike=False)
+    pols = {
+        "exact": CommPolicy(),
+        "plain": CommPolicy(qgrad_rs=q2, grad_ef=False),
+        "ef": CommPolicy(qgrad_rs=q2, grad_ef=True),
+    }
+    finals, tails, stores = {}, {}, {}
+    for name, pol in pols.items():
+        store = build_store(param_groups(cfg, plan), plan,
+                            jax.random.PRNGKey(0), jnp.float32, mesh)
+        step = make_train_step(cfg, plan, pol, opt_cfg, mesh,
+                               global_batch=8)
+        opt = init_train_state(store, opt_cfg,
+                               grad_ef=wants_grad_ef(pol, mesh),
+                               qgrad_ef=wants_qgrad_ef(pol, plan),
+                               fsdp=plan.fsdp)
+        if name == "ef":
+            assert "qef" in opt, list(opt)     # residual pytree present
+        losses = []
+        for i in range(steps):
+            batch = to_device(ds.batch(i))
+            store, opt, m = step(store, opt, batch)
+            losses.append(float(m["loss"]))
+            assert np.isfinite(losses[-1]), (name, i, losses[-1])
+        finals[name] = losses[-1]
+        tails[name] = float(np.mean(losses[-10:]))
+        stores[name] = store
+
+    def dist(name):
+        t = 0.0
+        for a, b in zip(jax.tree_util.tree_leaves(stores[name]),
+                        jax.tree_util.tree_leaves(stores["exact"])):
+            d = a.astype(jnp.float32) - b.astype(jnp.float32)
+            t += float(jnp.sum(d * d))
+        return t ** 0.5
+
+    d_plain, d_ef = dist("plain"), dist("ef")
+    # (a) the acceptance loss claim: 2-bit qgrad with EF beats plain
+    # 2-bit qgrad on final loss (measured 3.436 vs 3.468 at this
+    # setting; tail-10 means 3.538 vs 3.686 — reported, not asserted).
+    assert finals["ef"] < finals["plain"], (finals, tails)
+    # (b) trajectory tracking: the EF run's parameters stay closer to
+    # the exact run's than the plain run's do — measured ratio ~0.80
+    # (15.28 vs 19.14), deterministic seeds; 0.95 separates it cleanly
+    # from a broken EF path (~1.0).
+    assert d_ef < 0.95 * d_plain, (d_ef, d_plain)
+    print("qgrad_ef_train ok", finals, tails,
+          {"dist_plain": round(d_plain, 4), "dist_ef": round(d_ef, 4)})
+
+
 def check_depth_policy_train():
     """A depth-scheduled policy (edge layers INT8 TP, middle INT4, per
     the segmented pattern scan) trains end-to-end on the 8-device mesh
@@ -453,6 +534,7 @@ CHECKS = {
     "a2a": check_a2a_semantics,
     "train_two_policies": check_train_two_policies,
     "grad_ef_train": check_grad_ef_train,
+    "qgrad_ef_train": check_qgrad_ef_train,
     "depth_policy_train": check_depth_policy_train,
     "tp_equivalence": check_tp_equivalence,
     "ep_slice": check_ep_slice,

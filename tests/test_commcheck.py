@@ -19,7 +19,7 @@ import pytest
 from _hyp import given, settings, st
 from repro.analysis import (choreography, commcheck, layout, mutations,
                             sites, vmem)
-from repro.analysis.report import (ERROR, RULES, CheckReport,
+from repro.analysis.report import (ERROR, RULES, WARNING, CheckReport,
                                    CommCheckError)
 from repro.core.comm_config import CommConfig
 from repro.core.policy import CommPolicy, paper_policy, with_scheme
@@ -29,12 +29,20 @@ from repro.core.policy import CommPolicy, paper_policy, with_scheme
 # ---------------------------------------------------------------------------
 
 
+# Fixtures whose rule's reachable real-world diagnostic is
+# warning-severity: the store layout pads every flat length to the fsdp
+# axis by construction, so SITE-QGRAD-ALIGN's divisibility *error* is
+# defensive-only and a real model can only trip the group-padding lint.
+WARN_FIXTURES = {"qgrad_misaligned"}
+
+
 @pytest.mark.parametrize("name", sorted(mutations.FIXTURES))
 def test_mutation_fixture_fires_its_rule(name):
     fn, rule = mutations.FIXTURES[name]
     diags = fn()
-    fired = sorted({d.rule for d in diags if d.severity == ERROR})
-    assert rule in fired, (f"fixture {name}: wanted {rule} at error "
+    want = WARNING if name in WARN_FIXTURES else ERROR
+    fired = sorted({d.rule for d in diags if d.severity == want})
+    assert rule in fired, (f"fixture {name}: wanted {rule} at {want} "
                            f"severity, fired {fired}")
 
 

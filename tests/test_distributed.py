@@ -63,6 +63,11 @@ def test_grad_ef_2bit_beats_plain_after_50_steps():
     _run("grad_ef_train")
 
 
+@pytest.mark.slow
+def test_qgrad_ef_2bit_beats_plain_after_50_steps():
+    _run("qgrad_ef_train")
+
+
 def test_depth_policy_file_cli():
     """Acceptance: a depth-scheduled policy JSON runs end-to-end through
     launch/train.py --policy-file on the 8-fake-device mesh (pod axis
