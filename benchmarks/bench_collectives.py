@@ -80,13 +80,14 @@ def _worker(fast: bool):
                 ts[label].append((time.perf_counter() - t0) * 1e6)
         return {label: float(np.min(v)) for label, v in ts.items()}
 
-    def ar_case(cfg, axes, n):
+    def ar_case(cfg, axes, n, outer_cfg=None):
         @functools.partial(compat.shard_map, mesh=mesh,
                            in_specs=P(("pod", "data", "model")),
                            out_specs=P(("pod", "data", "model")),
                            check_vma=False)
         def f(xs):
-            return compressed_psum(xs[0], axes, cfg)[None]
+            return compressed_psum(xs[0], axes, cfg,
+                                   None, None, outer_cfg)[None]
 
         x = jax.random.normal(jax.random.PRNGKey(0), (dev, n), jnp.float32)
         return jax.jit(f), x
@@ -159,6 +160,14 @@ def _worker(fast: bool):
                 cfg = default_comm_config(bits, scheme=scheme)
                 add(f"{scheme}@{bits}", bits, cfg,
                     *ar_case(cfg, ("model", "pod"), n), cfg.wire_bytes(n))
+        # framed pod bridge (core/frame.py): hier_pp with the pod hop
+        # carrying the self-describing header + CRC32C — read against
+        # the raw hier_pp@bits rows above for the framing overhead
+        for bits in BITS:
+            cfg = default_comm_config(bits, scheme="hier_pp")
+            add(f"hier_pp_framed@{bits}", bits, cfg,
+                *ar_case(cfg, ("model", "pod"), n, cfg.with_framed()),
+                cfg.wire_bytes(n))
         for bits in (4, 2):   # EF gradient sync: the sub-4-bit regime
             cfg = default_comm_config(bits)
             add(f"grad_ef@{bits}", bits, cfg, *ef_case(cfg, n),

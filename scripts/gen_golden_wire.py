@@ -15,6 +15,12 @@ codec refactor cannot silently change the on-link bytes (and
 tests/test_wire_golden.py's drift guard asserts a rerun of this script
 reproduces the committed file).
 
+Framed vectors ("frame_int*", widths {2, 4, 8} x the same modes) pin
+the self-describing pod-bridge wire (core/frame.py): the raw codec
+payload plus the 16-byte header with CRC32C. tests/test_frame.py
+asserts these byte for byte, so the header layout and checksum are
+pinned just like the raw wire.
+
 Only rerun this when the wire format is *deliberately* changed, and say
 so in the commit message.
 """
@@ -78,6 +84,12 @@ def main(out: str = OUT):
             # the A2A wire: per-peer chunks, (peers, rows, wire_bytes(d))
             bufa = codec.encode(jnp.asarray(xa), cfg)
             arrays[f"a2a_int{bits}{tag}"] = np.asarray(bufa)
+    # framed pod-bridge vectors: raw payload + 16-byte header w/ CRC32C
+    for bits in (2, 4, 8):
+        for tag, spike, rotation in modes:
+            cfg = golden_cfg(bits, spike, rotation).with_framed()
+            buf = codec.encode(jnp.asarray(x), cfg)
+            arrays[f"frame_int{bits}{tag}"] = np.asarray(buf)
     os.makedirs(os.path.dirname(out), exist_ok=True)
     np.savez(out, **arrays)
     total = sum(a.nbytes for a in arrays.values())

@@ -6,6 +6,8 @@ Three layers over one substrate:
   of the declared RDMA protocols (:mod:`repro.kernels.protocol`);
 * :mod:`repro.analysis.layout` / :mod:`repro.analysis.vmem` — wire
   buffer partition proofs and kernel VMEM budgeting;
+* :mod:`repro.analysis.frames` — self-describing frame conformance
+  (header/layout agreement, version table, checksum coverage);
 * :mod:`repro.analysis.sites` — the comm-site lint against the policy
   engine, static enumeration + train-step trace.
 

@@ -31,7 +31,7 @@ import sys
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
-from repro.analysis import choreography, layout, sites, vmem
+from repro.analysis import choreography, frames, layout, sites, vmem
 from repro.analysis.report import (RULES, CheckReport, CommCheckError,
                                    err)
 from repro.core.comm_config import CommConfig
@@ -244,13 +244,16 @@ def check_fused_request(cfg, plan, policy: CommPolicy,
 # ---------------------------------------------------------------------------
 
 def core_report() -> CheckReport:
-    """The shape-independent static pass (choreography/layout/blocks)."""
+    """The shape-independent static pass (choreography/layout/blocks/
+    frames)."""
     rep = CheckReport()
     diags, n = choreography.check_choreography(TP_VALUES)
     rep.extend(diags, n)
     diags, n = layout.check_layouts()
     rep.extend(diags, n)
     diags, n = vmem.check_vmem_static()
+    rep.extend(diags, n)
+    diags, n = frames.check_frames()
     rep.extend(diags, n)
     return rep
 

@@ -15,7 +15,14 @@ proves, for every shipped width x group x spike x scale_int combination:
 * **LAYOUT-LANES** (warning): a wire row width that is not a multiple
   of 128 bytes maps poorly onto TPU lane tiling; the emulated paths are
   exact regardless, but compiled-TPU transport may pad (ROADMAP
-  carryover).
+  carryover);
+* **LAYOUT-SPIKEIDX**: the spike-index section must be able to address
+  every in-group position — under ``scale_int`` the indices are 1 byte
+  (int8 semantics in the codec), so a group beyond that range would
+  silently wrap indices and scatter spikes into the wrong slots on
+  decode. ``CommConfig.__post_init__`` rejects such configs at
+  construction; the raw-value check here keeps the rule testable and
+  guards any future layout that bypasses the dataclass.
 """
 from __future__ import annotations
 
@@ -86,6 +93,31 @@ def check_layout(layout: WireLayout, subject: str,
     return out
 
 
+#: max in-group positions the spike-index wire encoding can address:
+#: int8 on the wire under scale_int (spike.py's uint8 position lanes
+#: carry a ``group`` sentinel and the codec treats stored indices as
+#: signed), int16-range via the 2-byte meta dtype otherwise.
+_SPIKE_IDX_CAPACITY = {1: 128, 2: 2 ** 15}
+
+
+def check_spike_capacity(group: int, scale_int: bool,
+                         subject: str = "") -> List[Diagnostic]:
+    """LAYOUT-SPIKEIDX for raw (group, scale_int) values.
+
+    Raw-valued so mutation fixtures can exercise combinations that
+    ``CommConfig.__post_init__`` refuses to construct.
+    """
+    idx_bytes = 1 if scale_int else 2
+    cap = _SPIKE_IDX_CAPACITY[idx_bytes]
+    if group > cap:
+        return [err("LAYOUT-SPIKEIDX",
+                    f"group={group} exceeds the {idx_bytes}-byte "
+                    f"spike-index range ({cap} positions): in-group "
+                    f"indices would silently wrap on the wire",
+                    subject)]
+    return []
+
+
 def check_config_layouts(cfg: CommConfig, payloads: Sequence[int],
                          subject: str = "",
                          lanes: bool = False) -> List[Diagnostic]:
@@ -98,6 +130,8 @@ def check_config_layouts(cfg: CommConfig, payloads: Sequence[int],
             (f"bits={cfg.bits} group={cfg.group} spike={cfg.spike} "
              f"scale_int={cfg.scale_int} n={n}")
         out += check_layout(cfg.wire_layout(n), sub, lanes=lanes)
+        if cfg.spike:
+            out += check_spike_capacity(cfg.group, cfg.scale_int, sub)
     return out
 
 

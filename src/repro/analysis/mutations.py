@@ -13,7 +13,9 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Tuple
 
-from repro.analysis import choreography, layout, sites, vmem
+import numpy as np
+
+from repro.analysis import choreography, frames, layout, sites, vmem
 from repro.analysis.report import Diagnostic
 from repro.core.comm_config import CommConfig, Section, WireLayout
 from repro.kernels.protocol import (BARRIER, PUSH, READ, WAIT, WRITE,
@@ -150,6 +152,54 @@ def layout_undercover() -> List[Diagnostic]:
                 zero=Section(130, 2), total=256), "mutant")
 
 
+def spike_group_overflow() -> List[Diagnostic]:
+    """group=512 under 1-byte (scale_int) spike indices: in-group
+    indices silently wrap on the wire. ``CommConfig.__post_init__`` now
+    refuses to construct this, so the raw-value checker is the fixture
+    surface."""
+    return layout.check_spike_capacity(512, True, "mutant")
+
+
+# ---------------------------------------------------------------------------
+# frame mutants (malformed framed buffers)
+# ---------------------------------------------------------------------------
+
+def _framed_wire():
+    """One clean framed row + its config (mutation substrate)."""
+    import jax.numpy as jnp
+    from repro.core import frame
+    cc = CommConfig(bits=4, group=32, framed=True)
+    x = np.random.RandomState(0).standard_normal((1, 64)).astype(
+        np.float32)
+    return np.asarray(frame.frame_encode(jnp.asarray(x), cc)).copy(), cc
+
+
+def frame_bad_version() -> List[Diagnostic]:
+    """Version byte from a future binary: must be version-rejected
+    (before any checksum verdict — the sender should renegotiate)."""
+    wire, cc = _framed_wire()
+    wire[0, 2] = 99
+    return frames.check_frame_row(wire, cc, "mutant")
+
+
+def frame_header_mismatch() -> List[Diagnostic]:
+    """Sender framed at 4 bits, receiver expects the 8-bit layout: the
+    header/config disagreement must be typed, never a garbage decode."""
+    wire, cc = _framed_wire()
+    return frames.check_frame_row(wire, cc.with_bits(8), "mutant")
+
+
+def frame_partial_checksum() -> List[Diagnostic]:
+    """CRC computed over the payload only (a sender that skips the
+    header): coverage check must reject — otherwise corrupt header
+    bytes would slip through checksum-"valid" frames."""
+    from repro.core import frame
+    wire, cc = _framed_wire()
+    bad = frame.crc32c(wire[0, 16:])
+    wire[0, 12:16] = np.asarray([bad], "<u4").view(np.uint8)
+    return frames.check_frame_row(wire, cc, "mutant")
+
+
 # ---------------------------------------------------------------------------
 # VMEM mutants
 # ---------------------------------------------------------------------------
@@ -254,6 +304,10 @@ FIXTURES: Dict[str, Tuple[Callable[[], List[Diagnostic]], str]] = {
     "layout_gap": (layout_gap, "LAYOUT-GAP"),
     "layout_bounds": (layout_bounds, "LAYOUT-BOUNDS"),
     "layout_undercover": (layout_undercover, "LAYOUT-GAP"),
+    "spike_group_overflow": (spike_group_overflow, "LAYOUT-SPIKEIDX"),
+    "frame_bad_version": (frame_bad_version, "FRAME-VERSION"),
+    "frame_header_mismatch": (frame_header_mismatch, "FRAME-HEADER"),
+    "frame_partial_checksum": (frame_partial_checksum, "FRAME-COVERAGE"),
     "vmem_overflow": (vmem_overflow, "VMEM-OVERFLOW"),
     "vmem_a2a_overflow": (vmem_a2a_overflow, "VMEM-OVERFLOW"),
     "unresolvable_site": (unresolvable_site, "SITE-RESOLVE"),

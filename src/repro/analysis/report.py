@@ -34,6 +34,18 @@ RULES = {
                      "total (or starts before offset 0)",
     "LAYOUT-LANES": "wire row width is not 128-lane aligned (transport "
                     "tiling may pad on real hardware; warning)",
+    "LAYOUT-SPIKEIDX": "spike-index wire section cannot address every "
+                       "in-group position (group exceeds the 1-byte "
+                       "index range — indices would silently wrap)",
+    # self-describing frames (repro.analysis.frames)
+    "FRAME-HEADER": "frame header disagrees with the config's wire "
+                    "layout (bits/group/flags/length mismatch, bad "
+                    "magic, or header size out of sync)",
+    "FRAME-VERSION": "frame version outside the supported version "
+                     "table (version skew between sender and receiver)",
+    "FRAME-COVERAGE": "frame CRC32C does not cover header+payload "
+                      "(a corrupted region could slip through), or "
+                      "fails the Castagnoli check vector",
     # VMEM budget (repro.analysis.vmem)
     "VMEM-OVERFLOW": "kernel VMEM footprint exceeds the ~16 MB/core "
                      "budget",

@@ -31,8 +31,8 @@ and the per-step ``grad`` / ``qag`` / ``qgrad_rs`` sites — and verify:
 **dynamically** (:func:`trace_train_sites`): lower one real train step
 (smoke-size config, test mesh, no execution) under a recording policy
 that logs every ``resolve`` call, and verify the trace hits the sites
-the static enumeration promises — tp / tp_bwd / qag / qgrad_rs / grad
-always, a2a iff the stack has moe blocks — with every logged layer
+the static enumeration promises — tp / tp_bwd / qag / qgrad_rs / grad /
+bridge always, a2a iff the stack has moe blocks — with every logged layer
 index in range (SITE-TRACE). A comm call that bypasses the engine never
 logs, so new model code cannot silently grow unmanaged traffic.
 """
@@ -62,6 +62,10 @@ ALLOWED_SCHEMES = {
     "a2a": {"nccl", "two_step", "fused"},
     "qag": {"nccl", "two_step"},
     "qgrad_rs": {"nccl", "two_step"},
+    # the pod-bridge override is psum-shaped like grad, but it is meant
+    # to run framed and the fused RDMA kernels address raw wire offsets
+    # (CommConfig forbids framed+fused too).
+    "bridge": {"nccl", "two_step", "hierarchical", "hier_pp"},
 }
 
 
@@ -78,7 +82,8 @@ def enumerate_sites(cfg) -> List[SiteAddr]:
         sites.append(("tp_bwd", i))
         if kind == "moe":
             sites.append(("a2a", i))
-    sites += [("grad", None), ("qag", None), ("qgrad_rs", None)]
+    sites += [("grad", None), ("qag", None), ("qgrad_rs", None),
+              ("bridge", None)]
     return sites
 
 
@@ -141,17 +146,19 @@ def check_policy_sites(cfg, policy: CommPolicy,
         if cc not in seen:
             seen.add(cc)
             out += _roundtrip(cc, sub)
-    # EF residual demands a live compressed site to correct: either the
-    # cross-pod grad AR or the sharded-DP qgrad_rs reduce-scatter.
+    # EF residual demands a live compressed site to correct: the
+    # cross-pod grad AR (grad, or its bridge override) or the sharded-DP
+    # qgrad_rs reduce-scatter.
     if policy.grad_ef:
         def dead(cc):
             return cc is None or not cc.enabled or cc.scheme == "nccl"
         if dead(policy.resolve("grad")) and \
-                dead(policy.resolve("qgrad_rs")):
+                dead(policy.resolve("qgrad_rs")) and \
+                dead(policy.resolve("bridge")):
             out.append(err("SITE-EF",
-                           "grad_ef is set but both the grad and the "
-                           "qgrad_rs sites resolve exact/disabled — the "
-                           "EF residuals would never be consumed",
+                           "grad_ef is set but the grad, bridge and "
+                           "qgrad_rs sites all resolve exact/disabled — "
+                           "the EF residuals would never be consumed",
                            prefix + "site=grad"))
     # scan segmentation invariant
     try:

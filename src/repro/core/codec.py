@@ -47,17 +47,48 @@ _tile_kw = tilecodec.tile_kwargs
 
 
 def encode(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
-    """(..., n) float -> (..., cfg.wire_bytes(n)) uint8."""
+    """(..., n) float -> (..., cfg.wire_bytes(n)) uint8.
+
+    With ``cfg.framed`` the raw wire rows (byte-identical to the
+    unframed encode — both backends) gain the self-describing frame
+    header of :mod:`repro.core.frame`.
+    """
     assert cfg.enabled
     if resolve_backend(cfg) == "pallas":
-        return encode_pallas(x, cfg)
-    return encode_ref(x, cfg)
+        buf = encode_pallas(x, cfg)
+    else:
+        buf = encode_ref(x, cfg)
+    if cfg.framed:
+        from repro.core import frame
+        buf = frame.frame_wrap(buf, cfg)
+    return buf
 
 
 def decode(buf: jnp.ndarray, cfg: CommConfig, n: int,
            out_dtype=jnp.float32) -> jnp.ndarray:
-    """(..., wire_bytes(n)) uint8 -> (..., n) out_dtype."""
+    """(..., wire_bytes(n)) uint8 -> (..., n) out_dtype.
+
+    Framed configs validate the frame first. Concrete (host) buffers
+    raise typed :class:`repro.core.frame.FrameError`\\ s on any
+    malformed input; traced buffers (inside jit/shard_map) NaN-poison
+    the rows whose header or CRC32C fails, and pass valid rows through
+    bit-exactly.
+    """
     assert cfg.enabled
+    if cfg.framed:
+        from repro.core import frame
+        if isinstance(buf, jax.core.Tracer):
+            payload, ok = frame.frame_check_rows(buf, cfg, n)
+            out = _decode_raw(payload, cfg, n, out_dtype)
+            return jnp.where(ok[..., None], out,
+                             jnp.asarray(jnp.nan, out.dtype))
+        payload, _ = frame.frame_unwrap(buf, cfg)
+        return _decode_raw(jnp.asarray(payload), cfg, n, out_dtype)
+    return _decode_raw(buf, cfg, n, out_dtype)
+
+
+def _decode_raw(buf: jnp.ndarray, cfg: CommConfig, n: int,
+                out_dtype=jnp.float32) -> jnp.ndarray:
     if resolve_backend(cfg) == "pallas":
         return decode_pallas(buf, cfg, n, out_dtype)
     return decode_ref(buf, cfg, n, out_dtype)
@@ -73,7 +104,7 @@ def encode_pallas(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
     n = x.shape[-1]
     lead = x.shape[:-1]
     buf = ops.fused_encode_wire(x.reshape(-1, n), cfg, use_pallas=True)
-    return buf.reshape(*lead, cfg.wire_bytes(n))
+    return buf.reshape(*lead, cfg.wire_layout(n).total)
 
 
 def decode_pallas(buf: jnp.ndarray, cfg: CommConfig, n: int,
@@ -100,8 +131,9 @@ def encode_ref(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
     n = x.shape[-1]
     lead = x.shape[:-1]
     buf = tilecodec.encode_tile(x.reshape(-1, n), **_tile_kw(cfg, n))
-    assert buf.shape[-1] == cfg.wire_bytes(n), (
-        f"wire mismatch: got {buf.shape[-1]}, want {cfg.wire_bytes(n)}")
+    assert buf.shape[-1] == cfg.wire_layout(n).total, (
+        f"wire mismatch: got {buf.shape[-1]}, "
+        f"want {cfg.wire_layout(n).total}")
     return buf.reshape(*lead, buf.shape[-1])
 
 

@@ -36,6 +36,7 @@ DeepSeek-V3 / the paper). Quantization itself is straight-through.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Sequence
 
 import jax
@@ -303,42 +304,70 @@ def pipelined_hierarchical_all_reduce(x: jnp.ndarray, inner_axis: str,
 # --------------------------------------------------------------------------
 
 def _flat_all_reduce(xf: jnp.ndarray, axes: Sequence[str],
-                     cfg: CommConfig) -> jnp.ndarray:
-    """Dispatch on scheme for a padded flat vector over (inner[, outer])."""
+                     cfg: CommConfig,
+                     outer_cfg: CommConfig | None = None) -> jnp.ndarray:
+    """Dispatch on scheme for a padded flat vector over (inner[, outer]).
+
+    ``outer_cfg`` gives the slow bridge hop (the LAST axis — the pod /
+    DCN tier) its own wire format: different bits, and optionally the
+    self-describing frame (``outer_cfg.framed``), while the inner ICI
+    hop stays on ``cfg`` — mixed-policy pods on one fabric.
+    """
     if len(axes) == 1:
         # Single axis: no (inner, outer) split exists, so "hierarchical"
         # degenerates to the two-step itself; "hier_pp" keeps its
         # pipelining by feeding the microchunks through ONE batched
         # two-step schedule (collectives batch over leading dims) — this
         # is how hier_pp grad policies keep their pipelined schedule on
-        # the already-reduce-scattered single pod axis (train_step).
+        # the already-reduce-scattered single pod axis (train_step). The
+        # lone axis IS the bridge, so ``outer_cfg`` (when given) is the
+        # wire format that runs.
+        hop = outer_cfg or cfg
         if cfg.scheme == "hier_pp":
             chunks = max(1, cfg.pipeline_chunks)
-            out = quantized_all_reduce(xf.reshape(chunks, -1), axes[0], cfg)
+            out = quantized_all_reduce(xf.reshape(chunks, -1), axes[0],
+                                       hop)
             return out.reshape(xf.shape)
-        return quantized_all_reduce(xf, axes[0], cfg)
+        return quantized_all_reduce(xf, axes[0], hop)
     if cfg.scheme in ("two_step", "fused"):
         out = xf
-        for ax in axes:  # sequential two-step per axis
-            out = quantized_all_reduce(out, ax, cfg)
+        for i, ax in enumerate(axes):  # sequential two-step per axis
+            hop = outer_cfg if (outer_cfg is not None
+                                and i == len(axes) - 1) else cfg
+            out = quantized_all_reduce(out, ax, hop)
         return out
     inner, outer = axes
     if cfg.scheme == "hierarchical":
-        return hierarchical_all_reduce(xf, inner, outer, cfg)
+        return hierarchical_all_reduce(xf, inner, outer, cfg, outer_cfg)
     if cfg.scheme == "hier_pp":
-        return pipelined_hierarchical_all_reduce(xf, inner, outer, cfg)
+        return pipelined_hierarchical_all_reduce(xf, inner, outer, cfg,
+                                                 outer_cfg)
     raise ValueError(f"unknown scheme {cfg.scheme}")
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _group_mult(cfg: CommConfig, outer_cfg: CommConfig | None) -> int:
+    """Group granularity both tiers' wire formats align on."""
+    if outer_cfg is None or not outer_cfg.enabled:
+        return cfg.group
+    return math.lcm(cfg.group, outer_cfg.group)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
 def compressed_psum(x: jnp.ndarray, axes: tuple, cfg: CommConfig,
-                    groups=None, bwd_cfg: CommConfig | None = None):
+                    groups=None, bwd_cfg: CommConfig | None = None,
+                    outer_cfg: CommConfig | None = None):
     """psum(x) over mesh axes with the paper's compressed wire format.
 
     Accepts any shape; flattens, zero-pads to the chunking granularity,
     runs the configured scheme, and restores the shape. ``axes`` is a
     tuple: 1 axis -> two-step; 2 axes -> (inner, outer) hierarchical
     schemes are available via ``cfg.scheme``.
+
+    ``outer_cfg`` overrides the wire format of the bridge tier (the last
+    axis): the pod/DCN hop can run at different bits than the ICI hop
+    and, with ``outer_cfg.framed``, carry the self-describing frame
+    header of :mod:`repro.core.frame` — the mixed-policy-pods knob.
+    Padding aligns to both tiers' group sizes (lcm).
 
     Backward pass: the true transpose — psum of cotangents over the same
     axes (exact, unquantized). Under per-rank loss seeding inside
@@ -365,22 +394,23 @@ def compressed_psum(x: jnp.ndarray, axes: tuple, cfg: CommConfig,
         return out[:n].reshape(x.shape).astype(x.dtype)
     sizes = [compat.axis_size(a) for a in axes]
     chunks = cfg.pipeline_chunks if cfg.scheme == "hier_pp" else 1
-    mult = sizes[0] * cfg.group * chunks
+    mult = sizes[0] * _group_mult(cfg, outer_cfg) * chunks
     for s in sizes[1:]:
         mult *= s
     xf = _pad_to(x.reshape(-1), mult)
-    out = _flat_all_reduce(xf.astype(jnp.float32), tuple(axes), cfg)
+    out = _flat_all_reduce(xf.astype(jnp.float32), tuple(axes), cfg,
+                           outer_cfg)
     n = 1
     for s in x.shape:
         n *= s
     return out[:n].reshape(x.shape).astype(x.dtype)
 
 
-def _psum_fwd(x, axes, cfg, groups, bwd_cfg):
-    return compressed_psum(x, axes, cfg, groups, bwd_cfg), None
+def _psum_fwd(x, axes, cfg, groups, bwd_cfg, outer_cfg):
+    return compressed_psum(x, axes, cfg, groups, bwd_cfg, outer_cfg), None
 
 
-def _psum_bwd(axes, cfg, groups, bwd_cfg, res, g):
+def _psum_bwd(axes, cfg, groups, bwd_cfg, outer_cfg, res, g):
     del res
     if bwd_cfg is not None and bwd_cfg.enabled:
         return (compressed_psum(g, axes, bwd_cfg, groups),)
@@ -589,16 +619,19 @@ dispatch_all_to_all.defvjp(_a2a_fwd, _a2a_bwd)
 
 
 def grad_all_reduce(grads, axes: Sequence[str], cfg: CommConfig,
-                    mean: bool = True):
+                    mean: bool = True,
+                    outer_cfg: CommConfig | None = None):
     """Gradient sync for a pytree over (data[, pod]) axes — the paper's
-    hierarchical scheme applied to DP gradient AllReduce (outside autodiff).
+    hierarchical scheme applied to DP gradient AllReduce (outside
+    autodiff). ``outer_cfg`` gives the last (pod/DCN bridge) axis its
+    own wire format, see :func:`compressed_psum`.
     """
     denom = 1
     for a in axes:
         denom *= compat.axis_size(a)
 
     def one(g):
-        out = compressed_psum(g, tuple(axes), cfg)
+        out = compressed_psum(g, tuple(axes), cfg, None, None, outer_cfg)
         return out / denom if mean else out
 
     return jax.tree_util.tree_map(one, grads)

@@ -39,6 +39,12 @@ SCHEMES = ("nccl", "two_step", "fused", "hierarchical", "hier_pp")
 # kernel path (interpret mode off-TPU), "auto" picks pallas on TPU.
 BACKENDS = ("ref", "pallas", "auto")
 
+# Self-describing frame header prepended to the wire buffer when
+# ``CommConfig.framed`` is on (core/frame.py): magic+version, the layout
+# knobs, payload length, CRC32C. Fixed-size so wire accounting stays
+# static under jit.
+FRAME_HEADER_BYTES = 16
+
 
 class Section(NamedTuple):
     """One contiguous byte span of the wire buffer."""
@@ -127,6 +133,11 @@ class CommConfig:
     meta_dtype: str = "bfloat16"
     # Which codec implementation produces/consumes the wire buffer.
     backend: str = "auto"
+    # Prepend the self-describing frame header (core/frame.py) to every
+    # wire buffer: the receiver can validate layout agreement, version
+    # and a CRC32C instead of trusting position-addressed bytes. Meant
+    # for the cross-pod bridge tier; the in-jit hot path stays raw.
+    framed: bool = False
 
     def __post_init__(self):
         if self.enabled:
@@ -138,12 +149,27 @@ class CommConfig:
             if self.spike:
                 # 2 spikes per group are removed; need codes for the rest.
                 assert self.group >= 4
+                # In-group spike indices are int8 on the wire (1 byte
+                # under scale_int, and spike.py's position lanes are
+                # uint8 with a `group` sentinel): a larger group would
+                # silently wrap the indices and scatter spikes into the
+                # wrong slots on decode.
+                assert self.group <= 128, \
+                    f"spike reserving needs group <= 128 (int8 " \
+                    f"in-group indices on the wire), got {self.group}"
             if self.rotation:
                 assert not self.spike, \
                     "rotation replaces spike reserving (pick one)"
                 assert self.group & (self.group - 1) == 0, \
                     f"rotation needs a power-of-two group, " \
                     f"got {self.group}"
+            if self.framed:
+                # The fused RDMA kernels address raw wire_layout offsets
+                # in their staging buffers; frames are for the XLA-hop
+                # bridge tiers.
+                assert self.scheme != "fused", \
+                    "framed wire is not supported by the fused RDMA " \
+                    "kernels (use an XLA scheme for the bridge tier)"
 
     def with_backend(self, backend: str) -> "CommConfig":
         """Same config routed through a different codec backend."""
@@ -161,6 +187,10 @@ class CommConfig:
     def with_scheme(self, scheme: str) -> "CommConfig":
         """Same config routed through a different collective schedule."""
         return dataclasses.replace(self, scheme=scheme)
+
+    def with_framed(self, on: bool = True) -> "CommConfig":
+        """Same config with the self-describing frame header toggled."""
+        return dataclasses.replace(self, framed=on)
 
     def with_bits(self, bits: int) -> "CommConfig":
         """Same transport at a different width, paper-default adjusted.
@@ -208,7 +238,8 @@ class CommConfig:
         return layout.total - self.payload_bytes(n)
 
     def wire_bytes(self, n: int) -> int:
-        return self.wire_layout(n).total
+        total = self.wire_layout(n).total
+        return total + FRAME_HEADER_BYTES if self.framed else total
 
     def compression_ratio(self, n: int) -> float:
         return (2.0 * n) / self.wire_bytes(n)   # vs BF16

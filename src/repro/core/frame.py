@@ -1,0 +1,385 @@
+"""Self-describing wire frames: header + CRC32C around the wire buffer.
+
+The raw wire format (:mod:`repro.core.tilecodec`) is position-addressed:
+both ends must share one ``CommConfig`` and a truncated or bit-flipped
+buffer decodes silently into garbage. That is fine inside a jit — the
+compiler IS the contract — but wrong on a production fabric where pods,
+policies and binary versions differ. A frame makes the buffer
+self-describing::
+
+    byte  0-1   magic 0xFC 0x02
+    byte  2     frame version (1)
+    byte  3     bits
+    byte  4-5   group, u16 little-endian
+    byte  6     flags: bit0 spike, bit1 rotation, bit2 scale_int
+    byte  7     theta
+    byte  8-11  payload length in bytes, u32 little-endian
+    byte 12-15  CRC32C (Castagnoli), u32 little-endian, computed over
+                header bytes 0-11 + the entire payload
+
+followed by the unmodified ``wire_layout`` payload. The header is a
+fixed 16 bytes (:data:`repro.core.comm_config.FRAME_HEADER_BYTES`) so
+wire accounting stays static under jit.
+
+Two consumption modes:
+
+* **host** (concrete buffers — the pod-bridge ingress, tooling, tests):
+  :func:`frame_unwrap` / :func:`frame_decode` validate everything and
+  raise a *typed* :class:`FrameError` subclass on truncation, magic or
+  layout mismatch, version skew, length disagreement, or checksum
+  failure — a malformed buffer never decodes into garbage numbers.
+* **traced** (inside jit/shard_map — the framed collectives):
+  :func:`frame_check_rows` returns a per-row ``ok`` mask; the codec
+  NaN-poisons rows that fail validation, so corruption surfaces as NaN
+  gradients instead of silently wrong ones. On the all-ok path the
+  payload passes through bit-exactly.
+
+``frame_encode`` / ``frame_decode`` wrap the shared tilecodec bodies, so
+framed and raw wires carry byte-identical payloads — the golden vectors
+pin both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tilecodec
+from repro.core.comm_config import (BIT_UNITS, FRAME_HEADER_BYTES,
+                                    CommConfig, _wire_layout)
+
+FRAME_MAGIC = (0xFC, 0x02)
+FRAME_VERSION = 1
+#: versions this binary can decode (grows on compatible header changes).
+SUPPORTED_VERSIONS = (1,)
+
+_PREFIX_BYTES = 12          # header bytes covered by (and before) the CRC
+
+
+class FrameError(ValueError):
+    """Base class: a frame failed validation (never a garbage decode)."""
+
+
+class FrameTruncatedError(FrameError):
+    """Buffer shorter than the header, or than the declared payload."""
+
+
+class FrameVersionError(FrameError):
+    """Frame version not in :data:`SUPPORTED_VERSIONS` (rolling-deploy
+    skew: reject loudly, let the sender renegotiate)."""
+
+
+class FrameHeaderError(FrameError):
+    """Bad magic, malformed layout fields, or header disagreeing with
+    the receiver's expected ``CommConfig``."""
+
+
+class FrameLengthError(FrameError):
+    """Declared payload length disagrees with the buffer or with any
+    valid ``wire_layout`` of the declared knobs."""
+
+
+class FrameChecksumError(FrameError):
+    """Stored CRC32C does not match header+payload (corruption)."""
+
+
+# ---------------------------------------------------------------------------
+# CRC32C (Castagnoli): reflected polynomial 0x82F63B78
+# ---------------------------------------------------------------------------
+
+def _make_table() -> np.ndarray:
+    tbl = []
+    for i in range(256):
+        c = i
+        for _ in range(8):
+            c = (c >> 1) ^ (0x82F63B78 if c & 1 else 0)
+        tbl.append(c)
+    return np.asarray(tbl, np.uint32)
+
+
+_TABLE = _make_table()
+
+
+def crc32c(data) -> int:
+    """Host CRC32C of a byte string / uint8 array (table-driven).
+
+    Standard check value: ``crc32c(b"123456789") == 0xE3069283``.
+    """
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        buf = np.frombuffer(bytes(data), np.uint8)
+    else:
+        buf = np.asarray(data, np.uint8).reshape(-1)
+    crc = 0xFFFFFFFF
+    tbl = _TABLE.tolist()
+    for b in buf.tolist():
+        crc = (crc >> 8) ^ tbl[(crc ^ b) & 0xFF]
+    return crc ^ 0xFFFFFFFF
+
+
+def crc32c_rows(buf: jnp.ndarray) -> jnp.ndarray:
+    """Traced CRC32C per leading row: (..., B) uint8 -> (...) uint32.
+
+    Byte-serial ``lax.scan`` vectorized over rows (the frame CRC is a
+    bridge-tier cost, not a hot-path one); bit-identical to
+    :func:`crc32c`.
+    """
+    lead = buf.shape[:-1]
+    rows = buf.reshape(-1, buf.shape[-1]).astype(jnp.uint32)
+    tbl = jnp.asarray(_TABLE)
+
+    def step(crc, byte):
+        return (crc >> 8) ^ tbl[(crc ^ byte) & 0xFF], None
+
+    init = jnp.full((rows.shape[0],), 0xFFFFFFFF, jnp.uint32)
+    crc, _ = jax.lax.scan(step, init, rows.T)
+    return (crc ^ jnp.uint32(0xFFFFFFFF)).reshape(lead)
+
+
+# ---------------------------------------------------------------------------
+# header build / parse
+# ---------------------------------------------------------------------------
+
+class FrameHeader(NamedTuple):
+    """Parsed frame header (CRC field excluded; validated separately)."""
+    version: int
+    bits: int
+    group: int
+    spike: bool
+    rotation: bool
+    scale_int: bool
+    theta: int
+    payload_len: int
+
+
+def _flags(cfg: CommConfig) -> int:
+    return (int(cfg.spike) | (int(cfg.rotation) << 1)
+            | (int(cfg.scale_int) << 2))
+
+
+def header_prefix(cfg: CommConfig, payload_len: int) -> np.ndarray:
+    """The static 12 CRC-covered header bytes for one (cfg, length)."""
+    assert 0 <= payload_len < 1 << 32, payload_len
+    assert 0 <= cfg.theta < 256, cfg.theta
+    assert cfg.group < 1 << 16, cfg.group
+    h = np.zeros(_PREFIX_BYTES, np.uint8)
+    h[0], h[1] = FRAME_MAGIC
+    h[2] = FRAME_VERSION
+    h[3] = cfg.bits
+    h[4] = cfg.group & 0xFF
+    h[5] = (cfg.group >> 8) & 0xFF
+    h[6] = _flags(cfg)
+    h[7] = cfg.theta
+    h[8:12] = np.asarray([payload_len], "<u4").view(np.uint8)
+    return h
+
+
+def parse_header(row: np.ndarray) -> FrameHeader:
+    """First 16 bytes of one frame row -> :class:`FrameHeader`.
+
+    Only raises on structural problems (magic/version); field agreement
+    and CRC are the caller's checks so each failure class gets its own
+    typed error.
+    """
+    row = np.asarray(row, np.uint8).reshape(-1)
+    if row.shape[0] < FRAME_HEADER_BYTES:
+        raise FrameTruncatedError(
+            f"buffer holds {row.shape[0]} bytes, shorter than the "
+            f"{FRAME_HEADER_BYTES}-byte frame header")
+    if (int(row[0]), int(row[1])) != FRAME_MAGIC:
+        raise FrameHeaderError(
+            f"bad frame magic {int(row[0]):#04x} {int(row[1]):#04x} "
+            f"(want {FRAME_MAGIC[0]:#04x} {FRAME_MAGIC[1]:#04x})")
+    version = int(row[2])
+    if version not in SUPPORTED_VERSIONS:
+        raise FrameVersionError(
+            f"frame version {version} not supported "
+            f"(this binary decodes {SUPPORTED_VERSIONS})")
+    flags = int(row[6])
+    return FrameHeader(
+        version=version, bits=int(row[3]),
+        group=int(row[4]) | (int(row[5]) << 8),
+        spike=bool(flags & 1), rotation=bool(flags & 2),
+        scale_int=bool(flags & 4), theta=int(row[7]),
+        payload_len=int(row[8:12].view("<u4")[0]))
+
+
+def config_from_header(hdr: FrameHeader,
+                       like: Optional[CommConfig] = None) -> CommConfig:
+    """Reconstruct the codec knobs a frame declares (self-describing
+    decode). Transport knobs (scheme, backend) come from ``like`` or the
+    defaults — they are not wire properties."""
+    if hdr.bits not in BIT_UNITS:
+        raise FrameHeaderError(f"frame declares unsupported "
+                               f"bits={hdr.bits}")
+    base = like if like is not None else CommConfig()
+    try:
+        return dataclasses.replace(
+            base, enabled=True, bits=hdr.bits, group=hdr.group,
+            spike=hdr.spike, rotation=hdr.rotation,
+            scale_int=hdr.scale_int, theta=hdr.theta, framed=True)
+    except AssertionError as e:
+        raise FrameHeaderError(f"frame declares an invalid layout: {e}")
+
+
+def _payload_n(hdr: FrameHeader) -> int:
+    """Recover the element count from the declared payload length.
+
+    Bytes-per-group is linear in the group count for every shipped
+    layout, so divide by the one-group cost and verify exactly."""
+    if hdr.group < 4 or hdr.payload_len <= 0:
+        raise FrameLengthError(
+            f"cannot size a payload of {hdr.payload_len} bytes for "
+            f"group={hdr.group}")
+    per_group = _wire_layout(hdr.group, hdr.bits, hdr.group, hdr.spike,
+                             hdr.scale_int).total
+    n = hdr.payload_len // per_group * hdr.group
+    if n <= 0 or _wire_layout(n, hdr.bits, hdr.group, hdr.spike,
+                              hdr.scale_int).total != hdr.payload_len:
+        raise FrameLengthError(
+            f"declared payload length {hdr.payload_len} matches no "
+            f"whole-group wire_layout of bits={hdr.bits} "
+            f"group={hdr.group} spike={hdr.spike} "
+            f"scale_int={hdr.scale_int}")
+    return n
+
+
+# ---------------------------------------------------------------------------
+# wrap / unwrap
+# ---------------------------------------------------------------------------
+
+def frame_wrap(payload: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
+    """(..., L) uint8 raw wire rows -> (..., 16+L) framed rows.
+
+    Pure jnp (jit/shard_map-safe): the 12 static header bytes are a
+    constant, the CRC is computed per row in-trace."""
+    lead = payload.shape[:-1]
+    plen = payload.shape[-1]
+    rows = payload.reshape(-1, plen)
+    head = jnp.broadcast_to(jnp.asarray(header_prefix(cfg, plen)),
+                            (rows.shape[0], _PREFIX_BYTES))
+    body = jnp.concatenate([head, rows], axis=-1)
+    crc = jax.lax.bitcast_convert_type(crc32c_rows(body), jnp.uint8)
+    return jnp.concatenate([body[:, :_PREFIX_BYTES], crc,
+                            rows], axis=-1
+                           ).reshape(*lead, plen + FRAME_HEADER_BYTES)
+
+
+def frame_check_rows(buf: jnp.ndarray, cfg: CommConfig, n: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Traced validation: (..., 16+L) -> (payload (..., L), ok (...)).
+
+    Static problems (truncation / wrong buffer width for this config)
+    raise at trace time; data-dependent ones (corrupt header bytes, CRC
+    mismatch) come back as ``ok=False`` per row for the caller to
+    poison."""
+    want = _wire_layout(n, cfg.bits, cfg.group, cfg.spike,
+                        cfg.scale_int).total
+    got = buf.shape[-1]
+    if got < FRAME_HEADER_BYTES or got - FRAME_HEADER_BYTES < want:
+        raise FrameTruncatedError(
+            f"framed buffer holds {got} bytes; need "
+            f"{FRAME_HEADER_BYTES}+{want}")
+    if got - FRAME_HEADER_BYTES != want:
+        raise FrameLengthError(
+            f"framed buffer payload is {got - FRAME_HEADER_BYTES} "
+            f"bytes; this config's wire_layout({n}) is {want}")
+    head = buf[..., :_PREFIX_BYTES]
+    stored = jax.lax.bitcast_convert_type(
+        buf[..., _PREFIX_BYTES:FRAME_HEADER_BYTES], jnp.uint32)
+    payload = buf[..., FRAME_HEADER_BYTES:]
+    want_head = jnp.asarray(header_prefix(cfg, want))
+    ok_head = jnp.all(head == want_head, axis=-1)
+    crc = crc32c_rows(jnp.concatenate([head, payload], axis=-1))
+    return payload, ok_head & (crc == stored)
+
+
+def frame_unwrap(buf, cfg: Optional[CommConfig] = None,
+                 ) -> Tuple[np.ndarray, FrameHeader]:
+    """Host validation: (..., 16+L) concrete rows -> (payload, header).
+
+    Raises the typed :class:`FrameError` subclass for each malformed
+    class — truncation, bad magic, version skew, length mismatch,
+    header/config disagreement, checksum failure — and never returns a
+    payload that failed any check. ``cfg`` (optional) additionally pins
+    the expected layout knobs."""
+    arr = np.asarray(buf)
+    if arr.dtype != np.uint8:
+        raise FrameHeaderError(f"framed wire must be uint8, "
+                               f"got {arr.dtype}")
+    rows = arr.reshape(-1, arr.shape[-1]) if arr.ndim else \
+        arr.reshape(1, -1)
+    hdr = parse_header(rows[0])
+    for r in range(1, rows.shape[0]):
+        if not np.array_equal(rows[r, :_PREFIX_BYTES],
+                              rows[0, :_PREFIX_BYTES]):
+            raise FrameHeaderError(
+                f"row {r} header disagrees with row 0 (one transfer, "
+                f"one layout)")
+    avail = arr.shape[-1] - FRAME_HEADER_BYTES
+    if hdr.payload_len > avail:
+        raise FrameTruncatedError(
+            f"header declares a {hdr.payload_len}-byte payload but the "
+            f"buffer holds only {avail}")
+    if hdr.payload_len < avail:
+        raise FrameLengthError(
+            f"header declares a {hdr.payload_len}-byte payload but the "
+            f"buffer holds {avail} (trailing bytes are not covered by "
+            f"the checksum)")
+    if cfg is not None:
+        want = (cfg.bits, cfg.group, cfg.spike, cfg.rotation,
+                cfg.scale_int, cfg.theta)
+        got = (hdr.bits, hdr.group, hdr.spike, hdr.rotation,
+               hdr.scale_int, hdr.theta)
+        if want != got:
+            raise FrameHeaderError(
+                f"frame header {got} (bits, group, spike, rotation, "
+                f"scale_int, theta) disagrees with the receiver's "
+                f"config {want}")
+    _payload_n(hdr)            # length must match a whole-group layout
+    for r in range(rows.shape[0]):
+        stored = int(rows[r, _PREFIX_BYTES:FRAME_HEADER_BYTES]
+                     .view("<u4")[0])
+        body = np.concatenate([rows[r, :_PREFIX_BYTES],
+                               rows[r, FRAME_HEADER_BYTES:]])
+        want_crc = crc32c(body)
+        if stored != want_crc:
+            raise FrameChecksumError(
+                f"row {r}: stored CRC32C {stored:#010x} != computed "
+                f"{want_crc:#010x} (corrupt header or payload)")
+    return arr[..., FRAME_HEADER_BYTES:], hdr
+
+
+# ---------------------------------------------------------------------------
+# full codec wrappers (shared tilecodec bodies)
+# ---------------------------------------------------------------------------
+
+def frame_encode(x: jnp.ndarray, cfg: CommConfig) -> jnp.ndarray:
+    """(..., n) float -> (..., 16 + wire_layout(n).total) framed uint8."""
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    raw = tilecodec.encode_tile(x.reshape(-1, n),
+                                **tilecodec.tile_kwargs(cfg, n))
+    return frame_wrap(raw, cfg).reshape(*lead, -1)
+
+
+def frame_decode(buf, cfg: Optional[CommConfig] = None,
+                 n: Optional[int] = None,
+                 out_dtype=jnp.float32) -> jnp.ndarray:
+    """Host decode of a framed buffer, self-describing when ``cfg`` /
+    ``n`` are omitted (the pod-bridge ingress: the frame header alone
+    reconstructs the layout). Raises typed :class:`FrameError`\\ s."""
+    payload, hdr = frame_unwrap(buf, cfg)
+    dec_cfg = cfg if cfg is not None else config_from_header(hdr)
+    got_n = _payload_n(hdr)
+    if n is not None and n != got_n:
+        raise FrameLengthError(
+            f"frame carries {got_n} numbers, caller expected {n}")
+    lead = payload.shape[:-1]
+    rows = jnp.asarray(payload).reshape(-1, payload.shape[-1])
+    out = tilecodec.decode_tile(
+        rows, out_dtype=jnp.dtype(out_dtype),
+        **tilecodec.tile_kwargs(dec_cfg, got_n))
+    return out.reshape(*lead, got_n)

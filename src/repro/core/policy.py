@@ -35,13 +35,13 @@ import dataclasses
 import json
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.comm_config import CommConfig, NO_COMPRESSION, \
-    default_comm_config
+from repro.core.comm_config import CommConfig, FRAME_HEADER_BYTES, \
+    NO_COMPRESSION, default_comm_config
 
 # All addressable sites; LAYER_SITES are the ones that bind per layer
-# (activation traffic inside blocks). grad / qag / qgrad_rs are per-step
-# sites — they resolve at layer=None.
-SITES = ("tp", "a2a", "grad", "qag", "qgrad_rs", "tp_bwd")
+# (activation traffic inside blocks). grad / qag / qgrad_rs / bridge are
+# per-step sites — they resolve at layer=None.
+SITES = ("tp", "a2a", "grad", "qag", "qgrad_rs", "tp_bwd", "bridge")
 LAYER_SITES = ("tp", "a2a", "tp_bwd")
 
 SCHEDULE_KINDS = ("uniform", "first_last", "per_layer", "depth_interp")
@@ -205,6 +205,12 @@ class CommPolicy:
     # inference path has no backward; ZeRO++ quantizes gradients in the
     # same spirit). None -> exact psum of cotangents.
     tp_bwd: Schedule = uniform(None)
+    # Cross-pod bridge override (SDP4Bit-style mixed-tier widths): when
+    # set, the pod-axis gradient hop resolves here instead of ``grad``,
+    # so the slow DCN/pod tier can run at different bits — and framed
+    # (core/frame.py) — while the in-pod ICI tier keeps the grad site's
+    # raw config. None -> the bridge reuses the grad-site config.
+    bridge: Schedule = uniform(None)
     # EP token slicing (beyond-paper, §Perf): tokens are replicated over
     # the model axis, so each ep-group rank routes only its 1/ep slice
     # and the outputs are all-gathered — removes ep-fold duplicated
@@ -287,6 +293,25 @@ def with_scheme(policy: CommPolicy, scheme: str) -> CommPolicy:
     return policy.map_sites(
         lambda c: c.with_scheme(scheme) if c.enabled else c,
         sites=("tp", "grad", "tp_bwd", "a2a"))
+
+
+def with_framed_bridge(policy: CommPolicy, bits: int,
+                       scheme: str = "hier_pp",
+                       backend: Optional[str] = None) -> CommPolicy:
+    """Policy with a framed pod-bridge tier at its own bit width.
+
+    Installs a ``bridge``-site config (paper-default group/spike for
+    ``bits``) with the self-describing frame header on, leaving every
+    other site untouched — the mixed-policy-pods switch behind the
+    launch CLIs' ``--framed-bridge BITS``. The backend follows the grad
+    site's unless given (the bridge runs the same codec, just framed).
+    """
+    if backend is None:
+        grad_cfg = policy.resolve("grad")
+        backend = grad_cfg.backend if grad_cfg is not None else "auto"
+    cfg = default_comm_config(bits, scheme=scheme,
+                              backend=backend).with_framed()
+    return dataclasses.replace(policy, bridge=uniform(cfg))
 
 
 # ===========================================================================
@@ -497,4 +522,13 @@ def describe_policy(policy: CommPolicy, n_layers: Optional[int] = None,
         flags.append("grad_ef (error-feedback gradient compression)")
     if flags:
         lines.append("flags: " + ", ".join(flags))
+    framed = []
+    for site in SITES:
+        cfg = policy.resolve(site)
+        if cfg is not None and cfg.enabled and cfg.framed:
+            pct = 100.0 * FRAME_HEADER_BYTES / cfg.wire_bytes(n)
+            framed.append(f"{site} +{FRAME_HEADER_BYTES} B/frame header "
+                          f"({pct:.1f}% of wire @ n={n})")
+    if framed:
+        lines.append("framed: " + ", ".join(framed))
     return "\n".join(lines)

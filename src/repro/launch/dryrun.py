@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs import (ARCH_IDS, all_pairs, get_config, lowering_plan)
 from repro.core.policy import BF16_POLICY, CommPolicy, aggressive_policy, \
-    describe_policy, optimized_policy, paper_policy
+    describe_policy, optimized_policy, paper_policy, with_framed_bridge
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import INPUT_SHAPES, ModelConfig
 from repro.models.model import param_groups
@@ -214,7 +214,8 @@ def _fused_memory_estimate(cfg: ModelConfig, plan, shape, mode: str,
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                policy_name: str = "paper", verbose: bool = True,
                policy: Optional[CommPolicy] = None,
-               n_micro: Optional[int] = None) -> Dict:
+               n_micro: Optional[int] = None,
+               framed_bridge: Optional[int] = None) -> Dict:
     t0 = time.time()
     lp = lowering_plan(arch, shape_name)
     rec: Dict = {"arch": arch, "shape": shape_name, "mode": lp.mode,
@@ -229,6 +230,9 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     plan = make_plan(cfg, tp=16, fsdp=lp.fsdp)
     pol = policy if policy is not None else _policy(policy_name)
+    if framed_bridge is not None:
+        pol = with_framed_bridge(pol, framed_bridge)
+        rec["framed_bridge"] = framed_bridge
     if verbose:
         print(f"[dryrun] policy plan ({policy_name}, {cfg.n_layers} "
               f"layers):")
@@ -462,6 +466,11 @@ def main(argv=None):
                          "depth lowering proof")
     ap.add_argument("--policy", default="paper",
                     choices=["paper", "bf16", "optimized", "aggressive"])
+    ap.add_argument("--framed-bridge", type=int, default=None,
+                    metavar="BITS",
+                    help="override the cross-pod gradient hop with a "
+                         "framed bridge config at BITS (mixed-tier "
+                         "widths; pair with --multi-pod)")
     ap.add_argument("--baseline", action="store_true",
                     help="paper-faithful baseline layout: ZeRO fsdp=16 "
                          "everywhere (no serving weight-residency opt)")
@@ -485,6 +494,7 @@ def main(argv=None):
             else:
                 rec = dryrun_one(arch, shape, multi_pod=args.multi_pod,
                                  policy_name=args.policy,
+                                 framed_bridge=args.framed_bridge,
                                  verbose=not args.all)
         except Exception as e:
             rec = {"arch": arch, "shape": shape, "status": "error",

@@ -115,22 +115,41 @@ def main(argv=None):
     step = make_decode_step(cfg, plan, policy, mesh, args.batch, cache_len)
     out = []
     tok = prompts[:, :1]
-    t0 = time.time()
+    t_compile = t_steady = 0.0
     for i in range(args.prompt_len + args.gen - 1):
         db = {"tokens": tok.astype(jnp.int32)}
         if enc:
             db["enc_embeds"] = batch["enc_embeds"]
+        t0 = time.time()
         nt, caches = step(store, caches, db)
+        jax.block_until_ready(nt)
+        if i == 0:                    # first call traces + compiles
+            t_compile = time.time() - t0
+        else:
+            t_steady += time.time() - t0
         if i + 1 < args.prompt_len:
             tok = prompts[:, i + 1:i + 2]       # teacher-forced prompt
         else:
             tok = jnp.asarray(nt)[:, None]
             out.append(np.asarray(nt))
-    dt = time.time() - t0
     gen = np.stack(out, 1) if out else np.zeros((args.batch, 0), np.int32)
     steps = args.prompt_len + args.gen - 1
-    print(f"[serve] {steps} decode steps in {dt:.1f}s "
-          f"({dt/steps*1000:.1f} ms/step incl. compile)")
+    steady = (f"{t_steady / (steps - 1) * 1000:.1f} ms/step steady-state"
+              if steps > 1 else "n/a")
+    print(f"[serve] {steps} decode steps: first step (compile) "
+          f"{t_compile*1000:.1f} ms, {steady}")
+    # Cache-seeding drift check: after the decode cache has consumed the
+    # whole prompt token-by-token, its first generated token must agree
+    # with prefill's full-sequence prediction — the two paths share
+    # weights and greedy argmax, so any mismatch means the cache was
+    # seeded or rolled wrong.
+    if out:
+        first_np = np.asarray(first)
+        assert np.array_equal(out[0], first_np), (
+            f"decode's first post-prompt token {out[0]} != prefill's "
+            f"{first_np} — KV-cache seeding drift")
+        print("[serve] prefill/decode agreement: first generated token "
+              "matches prefill")
     print(f"[serve] generated tokens (first row): {gen[0][:16]}")
     assert np.all((gen >= 0) & (gen < cfg.vocab))
     print("[serve] OK")

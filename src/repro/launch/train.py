@@ -24,7 +24,8 @@ from repro.core.comm_config import SCHEMES
 from repro.core.policy import (BF16_POLICY, aggressive_policy,
                                depth_policy, describe_policy,
                                load_policy_file, paper_policy,
-                               with_backend, with_scheme)
+                               with_backend, with_framed_bridge,
+                               with_scheme)
 from repro.launch.mesh import make_test_mesh
 from repro.models.model import param_groups
 from repro.parallel.plan import make_plan
@@ -56,6 +57,12 @@ def main(argv=None):
                     help="JSON policy artifact (see configs/policies/); "
                          "overrides --policy — the schedule grammar "
                          "supports per-layer bit allocation")
+    ap.add_argument("--framed-bridge", type=int, default=None,
+                    metavar="BITS",
+                    help="run the cross-pod gradient hop at BITS with "
+                         "the self-describing frame header (core/frame) "
+                         "while the in-pod tier keeps the policy's raw "
+                         "grad config — SDP4Bit-style mixed-tier widths")
     ap.add_argument("--grad-ef", action="store_true",
                     help="error-feedback gradient compression: carry the "
                          "grad AR quantization error in the optimizer "
@@ -89,6 +96,8 @@ def main(argv=None):
     policy = with_backend(base_pol, args.codec_backend)
     if args.comm_scheme:
         policy = with_scheme(policy, args.comm_scheme)
+    if args.framed_bridge is not None:
+        policy = with_framed_bridge(policy, args.framed_bridge)
     if args.grad_ef:
         import dataclasses
         policy = dataclasses.replace(policy, grad_ef=True)

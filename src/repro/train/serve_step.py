@@ -64,6 +64,17 @@ def _local_batch(global_batch: int, mesh) -> int:
     size = 1
     for a in _dp_axes(mesh):
         size *= mesh.shape[a]
+    if global_batch % size != 0:
+        # The cache tree shards its batch dims over ALL dp axes
+        # (decode_cache_specs), so a batch that train's batch_spec
+        # would merely shard over ``data`` cannot be served: the old
+        # floor division silently dropped the remainder rows.
+        raise ValueError(
+            f"global_batch={global_batch} does not divide the serving "
+            f"(pod x data) slice count {size} "
+            f"(mesh {dict(mesh.shape)}); pad the batch or shrink the "
+            f"dp axes — floor division would silently drop "
+            f"{global_batch % size} row(s)")
     return global_batch // size
 
 

@@ -118,8 +118,18 @@ def pod_grad_config(policy: CommPolicy) -> CommConfig:
     microchunks through one two-step — so the resolved config passes
     through unchanged and ``hier_pp`` grad policies stay pipelined
     across the pod bridge.
+
+    A ``bridge``-site config, when set, overrides the grad site here —
+    the SDP4Bit-style mixed-tier split: the slow pod hop runs at its
+    own width (typically framed, core/frame.py) while the in-pod grad
+    machinery keeps the grad site's raw config. Both sites are resolved
+    unconditionally so the recording-policy trace lane sees them.
     """
-    return policy.resolve("grad") or NO_COMPRESSION
+    bridge = policy.resolve("bridge")
+    grad = policy.resolve("grad")
+    if bridge is not None:
+        return bridge
+    return grad or NO_COMPRESSION
 
 
 def _grad_ef_eligible(policy: CommPolicy, multi_pod: bool) -> bool:

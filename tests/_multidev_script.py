@@ -51,6 +51,53 @@ def check_quantized_ar():
     print("quantized_ar ok")
 
 
+def check_framed_bridge():
+    """Mixed-policy pod bridge: the pod-axis hop runs at its OWN width
+    and framed (self-describing header + CRC32C, core/frame.py) while
+    the ICI tier keeps the grad site's raw wire — and the numerics are
+    BIT-IDENTICAL to the same mixed-width run unframed (the frame is
+    pure envelope: byte-identical payload, header stripped on decode).
+    """
+    import dataclasses
+
+    from repro.core.comm_config import CommConfig
+    from repro.core.policy import CommPolicy, uniform, with_framed_bridge
+    from repro.train.train_step import pod_grad_config
+
+    mesh = make_test_mesh(data=1, model=4, pod=2)
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 3, 640), jnp.float32)
+    ref = np.sum(np.asarray(x), axis=0)
+    inner = CommConfig(bits=4, group=32)     # ICI tier: 4-bit raw
+    for scheme in ("two_step", "hierarchical", "hier_pp"):
+        cfg = dataclasses.replace(inner, scheme=scheme)
+        outs = {}
+        for framed in (False, True):
+            bridge = CommConfig(bits=8, group=128, scheme=scheme,
+                                framed=framed)   # pod tier: 8-bit
+
+            @partial(compat.shard_map, mesh=mesh,
+                     in_specs=P(("pod", "data", "model")),
+                     out_specs=P(("pod", "data", "model")),
+                     check_vma=False)
+            def f(xs):
+                return compressed_psum(xs[0], ("model", "pod"), cfg,
+                                       None, None, bridge)[None]
+
+            outs[framed] = np.asarray(jax.jit(f)(x))
+        np.testing.assert_array_equal(outs[True], outs[False],
+                                      err_msg=scheme)
+        err = float(np.max(np.abs(outs[True][0] - ref)))
+        assert err < 1.5, (scheme, err)
+
+    # the policy-engine route: with_framed_bridge installs the framed
+    # bridge config at the bridge site and pod_grad_config resolves it
+    pol = with_framed_bridge(CommPolicy(grad=uniform(inner)), bits=8)
+    bcfg = pod_grad_config(pol)
+    assert bcfg.framed and bcfg.bits == 8 and bcfg.enabled
+    assert pod_grad_config(CommPolicy(grad=uniform(inner))) == inner
+    print("framed_bridge ok (bit-identical to unframed, all schemes)")
+
+
 def check_fused_ar():
     """scheme="fused" (emulation backend on CPU) is numerically identical
     to the XLA two-step on 8 devices: same wire bytes, same reduce order
@@ -530,6 +577,7 @@ def check_depth_policy_train():
 CHECKS = {
     "quantized_ar": check_quantized_ar,
     "fused_ar": check_fused_ar,
+    "framed_bridge": check_framed_bridge,
     "fused_a2a": check_fused_a2a,
     "a2a": check_a2a_semantics,
     "train_two_policies": check_train_two_policies,

@@ -245,7 +245,7 @@ def test_trace_lane_catches_bypass():
     SITE-TRACE — simulated by checking the expectation logic directly
     on a recorded log missing the grad site."""
     logged = {("tp", None), ("tp", 0), ("tp_bwd", 0), ("qag", None),
-              ("qgrad_rs", None)}                  # no ("grad", None)
+              ("qgrad_rs", None), ("bridge", None)}  # no ("grad", None)
     from repro.core.policy import SITES
     expect = {s for s in SITES if s != "a2a"}
     missing = expect - {s for s, _ in logged}

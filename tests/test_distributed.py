@@ -33,6 +33,10 @@ def test_fused_allreduce_lockstep_vs_two_step():
     _run("fused_ar")
 
 
+def test_framed_pod_bridge_matches_unframed():
+    _run("framed_bridge")
+
+
 def test_quantized_a2a_semantics():
     _run("a2a")
 
